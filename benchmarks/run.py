@@ -1,0 +1,217 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  The paper-table benches
+reproduce Tables II-VI + Fig. 6/7 from the analytical chain (exact values
+side-by-side with the paper's); the TPU benches exercise the GAMA planner
+and the Pallas kernels (interpret mode) on this host.
+
+Run: PYTHONPATH=src python -m benchmarks.run [--filter substr]
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Callable, List, Tuple
+
+import numpy as np
+
+
+def timed(fn: Callable, reps: int = 3) -> Tuple[float, object]:
+    fn()  # warmup
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn()
+    us = (time.perf_counter() - t0) / reps * 1e6
+    return us, out
+
+
+ROWS: List[str] = []
+
+
+def emit(name: str, us: float, derived: str) -> None:
+    row = f"{name},{us:.1f},{derived}"
+    ROWS.append(row)
+    print(row)
+
+
+# ---------------------------------------------------------------------------
+# Paper tables
+# ---------------------------------------------------------------------------
+
+
+def bench_table2() -> None:
+    from repro.core.paper_tables import table2, table2_search
+    us, rows = timed(table2)
+    for r in rows:
+        emit(f"table2.{r['precision']}", us / len(rows),
+             f"gamma={r['gamma']:.2f}(paper {r['paper_gamma']}) "
+             f"mem={r['mem_bytes']}(paper {r['paper_mem_bytes']}) "
+             f"util={r['mem_util']*100:.0f}%")
+    us, rows = timed(table2_search)
+    for r in rows:
+        emit(f"table2.search.{r['precision']}", us / len(rows),
+             f"found=({r['search_m']}x{r['search_k']}x{r['search_n']}) "
+             f"paper=({r['paper_m']}x{r['paper_k']}x{r['paper_n']}) "
+             f"match={r['match']}")
+
+
+def bench_table3() -> None:
+    from repro.core.paper_tables import table3
+    us, rows = timed(table3)
+    for r in rows:
+        emit(f"table3.{r['precision']}", us / len(rows),
+             f"kcc_addr={r['kcc_address']:.0f}(paper {r['paper_address']}) "
+             f"kcc_loc={r['kcc_location']:.0f}(paper {r['paper_location']}) "
+             f"recovered={r['recovered_pp']:.1f}pp")
+
+
+def bench_table4() -> None:
+    from repro.core.paper_tables import table4
+    us, rows = timed(table4)
+    for r in rows:
+        emit(f"table4.{r['precision']}", us / len(rows),
+             f"pack_kcc_addr={r['pack_kcc_address']:.0f}"
+             f"(paper {r['paper_address']}) "
+             f"cascade_stall={r['cascade_stall']*100:.1f}%")
+
+
+def bench_fig6() -> None:
+    from repro.core.aiesim import best_pack_size, fig6_curve
+    us, rows = timed(lambda: fig6_curve("int8-int8"))
+    g = best_pack_size("int8-int8")
+    window = [r["g"] for r in rows if r["scalable"]]
+    emit("fig6.int8-int8", us,
+         f"best_pack={g}(paper 4) window=[{min(window)}..{max(window)}]"
+         f"(paper [3..10])")
+
+
+def bench_table5() -> None:
+    from repro.core.paper_tables import table5
+    us, rows = timed(table5)
+    for r in rows:
+        emit(f"table5.{r['precision']}", us / len(rows),
+             f"thpt={r['throughput_tops']:.1f}T(paper {r['paper_tops']}) "
+             f"TE={r['te']*100:.1f}%(paper {r['paper_te']*100:.0f}%) "
+             f"Y={r['y']} G={r['g']} X={r['x']} engines={r['engines']}")
+
+
+def bench_table6() -> None:
+    from repro.core.paper_tables import table6
+    us, rows = timed(table6)
+    for r in rows:
+        if r["paper_improvement_pp"] is None:
+            continue
+        emit(f"table6.{r['precision']}.vs_{r['prior_work']}", us / len(rows),
+             f"improvement={r['improvement_pp']:.1f}pp"
+             f"(paper {r['paper_improvement_pp']}pp)")
+
+
+def bench_fig7() -> None:
+    from repro.core.paper_tables import staggered_placement
+    us, rows = timed(staggered_placement)
+    chosen = next(r for r in rows if r["chosen"])
+    emit("fig7.staggered", us,
+         f"skew={chosen['skew']}(paper 2) "
+         f"util={chosen['utilization']*100:.1f}%(paper 94.7%)")
+
+
+# ---------------------------------------------------------------------------
+# TPU-side: planner + kernels
+# ---------------------------------------------------------------------------
+
+
+def bench_tpu_planner() -> None:
+    from repro.core import hw, planner
+    from repro.core.tile_search import search_tpu_tiles
+
+    def plan():
+        return search_tpu_tiles(65536, 7168, 16384, hw.BF16_BF16)
+    us, p = timed(plan)
+    emit("tpu.tile_search", us,
+         f"tile=({p.tm}x{p.tk}x{p.tn}) vmem={p.vmem_bytes/2**20:.1f}MiB "
+         f"gamma={p.gamma:.2f}")
+
+    site = planner.GemmSite("ffn", m=65536, k=7168, n=16384)
+    us, choices = timed(lambda: planner.plan_cascade(site, 16, 16))
+    best = min(choices, key=lambda c: c.step_s)
+    emit("tpu.cascade_sweep", us,
+         f"best_G={best.g} X={best.x} step={best.step_s*1e3:.2f}ms "
+         f"gamma={best.gamma:.2f}")
+
+
+def bench_kernels() -> None:
+    import jax.numpy as jnp
+    from repro.kernels import ops, ref
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.normal(size=(256, 512)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(512, 256)), jnp.float32)
+
+    us, out = timed(lambda: np.asarray(
+        ops.matmul(a, b, mode="kernel")), reps=2)
+    err = float(np.max(np.abs(out - np.asarray(ref.ref_gemm(a, b)))))
+    emit("kernel.gama_gemm.f32.256x512x256", us,
+         f"interpret_maxerr={err:.2e}")
+
+    ai = jnp.asarray(rng.integers(-128, 128, size=(128, 256)), jnp.int8)
+    bi = jnp.asarray(rng.integers(-128, 128, size=(256, 128)), jnp.int8)
+    us, out = timed(lambda: np.asarray(
+        ops.matmul(ai, bi, out_dtype=jnp.int8, scale=0.002,
+                   mode="kernel")), reps=2)
+    exact = bool((out == np.asarray(ref.ref_gemm(
+        ai, bi, out_dtype=jnp.int8, scale=0.002))).all())
+    emit("kernel.gama_gemm.int8toint8.128x256x128", us, f"exact={exact}")
+
+    q = jnp.asarray(rng.normal(size=(1, 4, 128, 64)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 2, 128, 64)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 2, 128, 64)), jnp.float32)
+    us, out = timed(lambda: np.asarray(
+        ops.attention(q, k, v, bq=64, bk=64, mode="kernel")), reps=1)
+    err = float(np.max(np.abs(out - np.asarray(ref.ref_attention(q, k, v)))))
+    emit("kernel.flash_attention.gqa4to2.128", us, f"maxerr={err:.2e}")
+
+
+def bench_roofline_summary() -> None:
+    """Aggregate the dry-run records (if present) — deliverable (g)."""
+    import glob
+    import json
+    files = sorted(glob.glob("experiments/dryrun/*.json"))
+    if not files:
+        emit("roofline.summary", 0.0, "no dry-run records found")
+        return
+    from repro.analysis.report import enrich, load_records
+    us, recs = timed(lambda: [enrich(r) for r in load_records()], reps=1)
+    doms = {}
+    for r in recs:
+        doms[r["terms"]["dominant"]] = doms.get(r["terms"]["dominant"], 0) + 1
+    emit("roofline.summary", us,
+         f"cells={len(recs)} dominant_counts={doms}")
+
+
+BENCHES = [
+    ("table2", bench_table2),
+    ("table3", bench_table3),
+    ("table4", bench_table4),
+    ("fig6", bench_fig6),
+    ("table5", bench_table5),
+    ("table6", bench_table6),
+    ("fig7", bench_fig7),
+    ("tpu_planner", bench_tpu_planner),
+    ("kernels", bench_kernels),
+    ("roofline", bench_roofline_summary),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--filter", type=str, default="")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for name, fn in BENCHES:
+        if args.filter and args.filter not in name:
+            continue
+        fn()
+
+
+if __name__ == "__main__":
+    main()

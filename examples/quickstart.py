@@ -1,0 +1,55 @@
+"""Quickstart: train a small GAMA-framework LM end to end on this host.
+
+Builds the smollm-family smoke config, runs the fault-tolerant trainer on
+the synthetic pipeline for 60 steps (loss drops ~1 nat), checkpoints,
+restores, and generates a few tokens with the serving engine.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import tempfile
+
+import jax
+import numpy as np
+
+from repro import configs
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.models import init_params, param_count
+from repro.optim import adamw
+from repro.serving.engine import ServeConfig, ServeEngine
+from repro.training.trainer import TrainConfig, Trainer, make_train_step
+
+
+def main() -> None:
+    cfg = configs.get_smoke("smollm_360m")
+    print(f"arch: {cfg.name}")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    print(f"params: {param_count(params)/1e6:.2f}M")
+
+    data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=64,
+                                  global_batch=8))
+    opt_cfg = adamw.AdamWConfig(lr=2e-3, warmup_steps=5, total_steps=60)
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg, remat=False))
+
+    ckpt_dir = tempfile.mkdtemp(prefix="repro_quickstart_")
+    trainer = Trainer(cfg, TrainConfig(steps=60, ckpt_every=20,
+                                       ckpt_dir=ckpt_dir, log_every=10),
+                      opt_cfg, params, adamw.init(params),
+                      lambda s: data.iterate(s), step_fn)
+    result = trainer.run()
+    for m in result["metrics"]:
+        print(f"  step {m['step']:3d}  loss {m['loss']:.3f}  "
+              f"({m['dt']*1e3:.0f} ms)")
+    first, last = result["metrics"][0]["loss"], result["metrics"][-1]["loss"]
+    print(f"loss {first:.3f} -> {last:.3f} "
+          f"({'OK' if last < first else 'NOT DECREASING'})")
+
+    engine = ServeEngine(cfg, trainer.params,
+                         ServeConfig(batch_slots=2, max_len=96))
+    prompts = np.asarray(data.batch_at(999)["tokens"][:2, :16], np.int32)
+    out = engine.generate(prompts, max_new=8)
+    print("generated token ids:", out.tolist())
+
+
+if __name__ == "__main__":
+    main()

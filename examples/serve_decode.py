@@ -1,0 +1,36 @@
+"""Batched serving demo: prefill + decode with KV caches across
+architecture families (dense GQA, MoE, RWKV state, hybrid Jamba).
+
+    PYTHONPATH=src python examples/serve_decode.py
+"""
+
+import time
+
+import jax
+import numpy as np
+
+from repro import configs
+from repro.models import init_params
+from repro.serving.engine import ServeConfig, ServeEngine
+
+ARCHS = ["qwen3_8b", "kimi_k2_1t_a32b", "rwkv6_3b", "jamba_v01_52b"]
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    for arch in ARCHS:
+        cfg = configs.get_smoke(arch)
+        params = init_params(jax.random.PRNGKey(1), cfg)
+        engine = ServeEngine(cfg, params,
+                             ServeConfig(batch_slots=4, max_len=64))
+        prompts = rng.integers(0, cfg.vocab_size, size=(4, 12)).astype(
+            np.int32)
+        t0 = time.monotonic()
+        out = engine.generate(prompts, max_new=12)
+        dt = time.monotonic() - t0
+        print(f"{cfg.name:22s} generated {out.shape} in {dt:.2f}s "
+              f"(incl. compile); sample: {out[0, :6].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""repro — GAMA (GEMM on AMD Versal AIE2) reproduced + deployed as a
+TPU-native JAX training/serving framework.  See DESIGN.md."""
+
+__version__ = "0.1.0"

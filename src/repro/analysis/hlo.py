@@ -1,0 +1,118 @@
+"""Post-optimization HLO analysis: collective bytes, loop-aware.
+
+``compiled.cost_analysis()`` has no collective term, so we parse the
+optimized HLO text: sum the *output* shape bytes of every collective op
+(all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute), which is the per-device wire payload GSPMD moves.
+
+Loop awareness: ops inside a while-loop body execute once per trip; for
+scan-over-layers models the trip count equals the layer-group count,
+which the caller knows — we detect which computations are while-bodies
+and multiply their collective bytes by ``loop_trip_count``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter",
+                  "all-to-all", "collective-permute")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+# e.g.  "bf16[16,1024,448]{2,1,0}"  or "(f32[8,128], s32[8])"
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^=]*?\)|\S+)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(")
+_WHILE_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_CALL_RE = re.compile(r"(?:calls|to_apply|body|condition)=%?([\w.\-]+)")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_op: Dict[str, float]
+    count_by_op: Dict[str, int]
+    f32_bytes: float = 0.0          # payload carried at f32
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(self.bytes_by_op.values())
+
+    @property
+    def bf16_equivalent_bytes(self) -> float:
+        """XLA *CPU* upcasts bf16 dot operands/outputs to f32, so the
+        partitioner's dot-adjacent collectives carry doubled payloads vs
+        a TPU build of the same program.  This corrects f32 collective
+        payloads of a bf16-compute model back to 2 bytes/element (see
+        EXPERIMENTS.md §Dry-run notes)."""
+        return self.total_bytes - self.f32_bytes / 2.0
+
+
+def parse_collectives(hlo_text: str,
+                      loop_trip_count: int = 1) -> CollectiveStats:
+    """Sum collective output bytes; while-body ops weighted by trip count.
+
+    `-start`/`-done` async pairs are counted once (on -start; `-done`
+    lines don't match because their operand is the start token).
+    """
+    # Pass 1: find while-body computation names.
+    while_bodies = set()
+    for line in hlo_text.splitlines():
+        if " while(" in line or "= while(" in line:
+            m = _WHILE_BODY_RE.search(line)
+            if m:
+                while_bodies.add(m.group(1))
+
+    bytes_by_op: Dict[str, float] = {op: 0.0 for op in COLLECTIVE_OPS}
+    count_by_op: Dict[str, int] = {op: 0 for op in COLLECTIVE_OPS}
+    f32_bytes = 0.0
+    current_comp: Optional[str] = None
+
+    for line in hlo_text.splitlines():
+        mc = _COMP_RE.match(line)
+        if mc and ("{" in line):
+            current_comp = mc.group(1)
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        _, shape_str, op = m.group(1), m.group(2), m.group(3)
+        if "-done(" in line:
+            continue
+        weight = loop_trip_count if current_comp in while_bodies else 1
+        nbytes = _shape_bytes(shape_str) * weight
+        bytes_by_op[op] += nbytes
+        count_by_op[op] += weight
+        if shape_str.lstrip("(").startswith("f32"):
+            f32_bytes += nbytes
+    return CollectiveStats(bytes_by_op=bytes_by_op, count_by_op=count_by_op,
+                           f32_bytes=f32_bytes)
+
+
+def count_op(hlo_text: str, opname: str) -> int:
+    return len(re.findall(rf"\b{re.escape(opname)}\(", hlo_text))

@@ -1,0 +1,160 @@
+"""Roofline report generation from the dry-run records.
+
+Terms per (arch x shape x mesh):
+
+  compute_s    = analytic FLOPs / (chips x 197 TFLOP/s)
+  memory_s     = analytic HBM bytes / (chips x 819 GB/s)
+  collective_s = HLO-parsed collective bytes / (chips x 50 GB/s)
+
+The compute/memory terms come from the first-principles workload model
+(repro.launch.dryrun_lib.analytic_flops + the traffic model below): XLA's
+CPU cost analysis is kept as a *diagnostic* column because it over-reports
+for gather/scatter-heavy programs (MoE dispatch) and counts fusion-internal
+traffic — on dense architectures it agrees with the analytic model within
+~1.5x (see EXPERIMENTS.md §Dry-run notes).  Collective bytes are the one
+quantity genuinely read off the compiled artifact (trip-weighted parse of
+the partitioned HLO).
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from repro import configs as C
+from repro.core import hw
+from repro.launch.dryrun_lib import analytic_flops
+
+CHIP = hw.TPU_V5E
+
+
+def analytic_hbm_bytes(cfg, batch: int, seq: int, kind: str) -> float:
+    """Per-step global HBM traffic model (order-of-magnitude roofline).
+
+    train:   params f32 (fwd read + bwd read + grad + 2x3 opt moments)
+             + activation traffic ~24 B/token/layer-width (bf16, remat)
+    prefill: params bf16 1x + act ~12 B + KV-cache write
+    decode:  params 1x + full KV-cache read + write slice
+    """
+    n = cfg.n_params()
+    t = batch * (seq if kind in ("train", "prefill") else 1)
+    act = t * cfg.d_model * cfg.n_layers
+    kv_heads = max(cfg.n_kv_heads, 0)
+    attn_layers = sum(1 for s in cfg.pattern if s.mixer == "attn") \
+        * cfg.n_groups
+    cache = 2 * batch * kv_heads * seq * cfg.d_head * 2 * attn_layers
+    if kind == "train":
+        return n * 4 * 9 + act * 24
+    if kind == "prefill":
+        return n * 2 + act * 12 + cache
+    return n * 2 + cache + 2 * batch * cfg.d_model * cfg.n_layers * 2
+
+
+def load_records(path: str = "experiments/dryrun") -> List[Dict]:
+    recs = []
+    for f in sorted(glob.glob(os.path.join(path, "*.json"))):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def enrich(rec: Dict) -> Dict:
+    """Recompute principled terms for one record."""
+    cfg = C.get(rec["arch"])
+    spec = C.SHAPES[rec["shape"]]
+    b, s, kind = spec["global_batch"], spec["seq_len"], spec["kind"]
+    chips = rec["chips"]
+    af = analytic_flops(cfg, b, s, kind)
+    flops = af["total"]
+    # remat recomputes the in-scan forward once more during backward.
+    if kind == "train" and rec.get("remat", True):
+        flops += af["group_fwd"] * cfg.n_groups
+    hbm = analytic_hbm_bytes(cfg, b, s, kind)
+    # bf16-equivalent payloads (XLA-CPU f32-dot artifact correction); old
+    # records without the field fall back to raw totals.
+    coll = rec["collectives"].get("bf16_equivalent_bytes_per_device",
+                                  rec["collectives"]
+                                  ["total_bytes_per_device"])
+
+    compute_s = flops / (chips * CHIP.peak_bf16_flops)
+    memory_s = hbm / (chips * CHIP.hbm_bw)
+    collective_s = coll / CHIP.ici_bw
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    model_flops = (6.0 if kind == "train" else 2.0) \
+        * cfg.n_active_params() * af["tokens"]
+    # Roofline fraction: useful-FLOPs throughput at the bound vs peak.
+    step_time = bound
+    mfu = model_flops / (step_time * chips * CHIP.peak_bf16_flops) \
+        if step_time > 0 else 0.0
+    out = dict(rec)
+    out["terms"] = {
+        "compute_s": compute_s, "memory_s": memory_s,
+        "collective_s": collective_s, "dominant": dominant,
+        "model_flops": model_flops,
+        "roofline_fraction": mfu,
+        "analytic_flops": flops,
+        "hlo_flops_ratio": rec["roofline"]["hlo_flops_per_chip"] * chips
+        / max(flops, 1.0),
+    }
+    return out
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    return f"{x*1e3:.1f}ms"
+
+
+def roofline_table(recs: List[Dict], mesh: str = "16x16") -> str:
+    """EXPERIMENTS.md §Roofline markdown table."""
+    lines = [
+        "| arch | shape | compute | memory | collective | dominant |"
+        " MFU@bound | MODEL/HLO flops | mem/chip |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r["mesh"] != mesh:
+            continue
+        t = r["terms"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(t['compute_s'])} "
+            f"| {fmt_s(t['memory_s'])} | {fmt_s(t['collective_s'])} "
+            f"| **{t['dominant']}** "
+            f"| {t['roofline_fraction']*100:.1f}% "
+            f"| {1.0/max(t['hlo_flops_ratio'],1e-9):.2f} "
+            f"| {r['memory']['peak_per_device_gib']:.1f}GiB |")
+    return "\n".join(lines)
+
+
+def dryrun_table(recs: List[Dict]) -> str:
+    lines = [
+        "| arch | shape | mesh | compile | bytes/device | collective"
+        " bytes/device | AG/AR/RS/A2A counts |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        c = r["collectives"]["count_by_op"]
+        counts = (f"{c.get('all-gather',0)}/{c.get('all-reduce',0)}/"
+                  f"{c.get('reduce-scatter',0)}/{c.get('all-to-all',0)}")
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['compile_s']:.1f}s "
+            f"| {r['memory']['peak_per_device_gib']:.1f}GiB "
+            f"| {r['collectives']['total_bytes_per_device']/2**30:.2f}GiB "
+            f"| {counts} |")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    recs = [enrich(r) for r in load_records()]
+    print("# Dry-run records:", len(recs))
+    print(roofline_table(recs))
+
+
+if __name__ == "__main__":
+    main()

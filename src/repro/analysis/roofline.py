@@ -1,0 +1,100 @@
+"""Roofline terms from the compiled dry-run artifact.
+
+Per (arch x shape x mesh):
+
+    compute term    = HLO_FLOPs   / (chips x peak_FLOP/s)
+    memory term     = HLO_bytes   / (chips x HBM_bw)
+    collective term = collective_bytes / (chips x link_bw)
+
+Hardware constants (assignment): 197 TFLOP/s bf16/chip, 819 GB/s HBM,
+~50 GB/s/link ICI.
+
+`cost_analysis()` on a CPU-compiled module reports flops/bytes for the
+program as partitioned (i.e. per-device totals across the whole program);
+XLA counts while-loop bodies ONCE, so we scale loop-resident work by the
+scan trip count (layer groups), which we know exactly from the config.
+MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE) diagnoses how much of
+the compiled compute is "useful".
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from repro.core import hw
+from repro.analysis.hlo import CollectiveStats
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops_per_chip: float
+    hlo_bytes_per_chip: float
+    collective_bytes_per_chip: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops_total: float
+    useful_ratio: float          # MODEL_FLOPS / (HLO_FLOPs x chips)
+    dominant: str
+    bytes_per_chip_peak: float   # from memory_analysis
+
+    def as_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+def model_flops(n_active_params: float, tokens: float,
+                training: bool) -> float:
+    """6*N*D for a train step; 2*N*D for inference (fwd only)."""
+    factor = 6.0 if training else 2.0
+    return factor * n_active_params * tokens
+
+
+def compute_roofline(
+    *,
+    arch: str,
+    shape: str,
+    mesh_name: str,
+    chips: int,
+    cost: Dict[str, float],
+    collectives: CollectiveStats,
+    loop_trip_count: int,
+    loop_flop_fraction: float,
+    tokens: float,
+    n_active_params: float,
+    training: bool,
+    peak_bytes_per_chip: float,
+    chip: hw.TpuChip = hw.TPU_V5E,
+) -> RooflineTerms:
+    """Derive the three terms.
+
+    `cost` = compiled.cost_analysis(); its flops/bytes count while bodies
+    once.  `loop_flop_fraction` is the fraction of the program's work that
+    lives inside the layer scan (~1.0 for deep stacks) — we scale that
+    portion by the trip count: true = cost * ((1-f) + f * trips).
+    """
+    scale = (1.0 - loop_flop_fraction) + loop_flop_fraction * loop_trip_count
+    flops = float(cost.get("flops", 0.0)) * scale
+    nbytes = float(cost.get("bytes accessed", 0.0)) * scale
+    coll = collectives.total_bytes  # parser already trip-weighted
+
+    compute_s = flops / chip.peak_bf16_flops
+    memory_s = nbytes / chip.hbm_bw
+    collective_s = coll / chip.ici_bw
+
+    mf = model_flops(n_active_params, tokens, training)
+    useful = mf / max(flops * chips, 1.0)
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    return RooflineTerms(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        hlo_flops_per_chip=flops, hlo_bytes_per_chip=nbytes,
+        collective_bytes_per_chip=coll,
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        model_flops_total=mf, useful_ratio=useful, dominant=dominant,
+        bytes_per_chip_peak=peak_bytes_per_chip)

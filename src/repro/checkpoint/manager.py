@@ -1,0 +1,179 @@
+"""Sharded checkpointing: async save, atomic commit, elastic restore.
+
+Layout: <dir>/step_<N>/  with one .npy per leaf (path-encoded filename)
+plus a manifest.json.  Writes go to a temp dir and are atomically renamed
+— a crash mid-save never corrupts the latest checkpoint (fault-tolerance
+requirement).  Saves run on a background thread (training continues).
+
+Elastic restore: leaves are loaded by *path*, validated by shape, and
+device_put against the *current* policy's shardings — so a checkpoint
+written on one mesh restores onto any other mesh (elastic re-scaling), as
+long as logical shapes match.  On a real multi-host pod each host would
+write only its addressable shards; the path layout already supports that
+(leafname.shard<k>) — single-process here writes shard0 = full array.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+
+def _flatten_with_paths(tree: PyTree) -> Dict[str, Any]:
+    flat = {}
+
+    def walk(path, node):
+        if node is None:          # optional subtrees (e.g. no master copy)
+            return
+        if isinstance(node, dict):
+            for k, v in node.items():
+                walk(path + (str(k),), v)
+        elif isinstance(node, (list, tuple)):
+            for i, v in enumerate(node):
+                walk(path + (str(i),), v)
+        elif hasattr(node, "_fields"):  # NamedTuple
+            for k in node._fields:
+                walk(path + (k,), getattr(node, k))
+        else:
+            flat["/".join(path)] = node
+    walk((), tree)
+    return flat
+
+
+def _set_by_path(tree: PyTree, path: str, value: Any) -> None:
+    keys = path.split("/")
+    node = tree
+    for k in keys[:-1]:
+        node = node[int(k)] if isinstance(node, (list, tuple)) else node[k]
+    last = keys[-1]
+    if isinstance(node, list):
+        node[int(last)] = value
+    else:
+        node[last] = value
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------- save
+
+    def save(self, step: int, tree: PyTree, blocking: bool = False) -> None:
+        """Snapshot to host memory now; write to disk asynchronously."""
+        flat = _flatten_with_paths(tree)
+        host = {k: np.asarray(v) for k, v in flat.items()}
+        self.wait()
+        self._thread = threading.Thread(
+            target=self._write, args=(step, host), daemon=True)
+        self._thread.start()
+        if blocking:
+            self.wait()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, step: int, host: Dict[str, np.ndarray]) -> None:
+        final = os.path.join(self.dir, f"step_{step:09d}")
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        manifest = {}
+        for key, arr in host.items():
+            fname = key.replace("/", "__") + ".npy"
+            true_dtype = str(arr.dtype)
+            if arr.dtype.kind not in "fiub":   # ml_dtypes (bf16 etc.):
+                arr = arr.astype(np.float32)   # np.save can't round-trip
+            np.save(os.path.join(tmp, fname), arr)
+            manifest[key] = {"file": fname, "shape": list(arr.shape),
+                             "dtype": true_dtype}
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump({"step": step, "leaves": manifest}, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)       # atomic commit
+        self._gc()
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:09d}"),
+                          ignore_errors=True)
+
+    # ---------------------------------------------------------- restore
+
+    def all_steps(self):
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, template: PyTree, step: Optional[int] = None,
+                shardings: Optional[PyTree] = None) -> Tuple[PyTree, int]:
+        """Load into the structure of `template` (values replaced).
+
+        `shardings`: optional matching pytree of NamedShardings — leaves
+        are device_put against them (elastic re-mesh on restore).
+        """
+        step = self.latest_step() if step is None else step
+        assert step is not None, "no checkpoint found"
+        path = os.path.join(self.dir, f"step_{step:09d}")
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)["leaves"]
+
+        flat_t = _flatten_with_paths(template)
+        flat_s = _flatten_with_paths(shardings) if shardings is not None \
+            else {}
+        out = jax.tree.map(lambda x: x, template)  # structural copy
+        # NamedTuples are immutable: rebuild via dict of leaves.
+        leaves = {}
+        for key, spec in manifest.items():
+            if key not in flat_t:
+                continue                      # elastic: extra leaf dropped
+            arr = np.load(os.path.join(path, spec["file"]))
+            tmpl = flat_t[key]
+            assert tuple(arr.shape) == tuple(tmpl.shape), (
+                f"{key}: ckpt {arr.shape} != template {tmpl.shape}")
+            if key in flat_s:
+                leaves[key] = jax.device_put(
+                    jax.numpy.asarray(arr).astype(tmpl.dtype), flat_s[key])
+            else:
+                leaves[key] = jax.numpy.asarray(arr).astype(tmpl.dtype)
+        rebuilt = _rebuild(template, leaves)
+        return rebuilt, step
+
+
+def _rebuild(template: PyTree, leaves: Dict[str, Any],
+             path: Tuple[str, ...] = ()) -> PyTree:
+    if isinstance(template, dict):
+        return {k: _rebuild(v, leaves, path + (str(k),))
+                for k, v in template.items()}
+    if isinstance(template, tuple) and hasattr(template, "_fields"):
+        return type(template)(*(
+            _rebuild(getattr(template, k), leaves, path + (k,))
+            for k in template._fields))
+    if isinstance(template, list):
+        return [_rebuild(v, leaves, path + (str(i),))
+                for i, v in enumerate(template)]
+    if isinstance(template, tuple):
+        return tuple(_rebuild(v, leaves, path + (str(i),))
+                     for i, v in enumerate(template))
+    return leaves.get("/".join(path), template)

@@ -1,0 +1,7 @@
+"""Architecture configs (--arch <id>) + shape cells; see registry.py."""
+
+from repro.configs.registry import (ARCH_IDS, SHAPES, Cell, cells, get,
+                                    get_smoke, runnable_cells)
+
+__all__ = ["ARCH_IDS", "SHAPES", "Cell", "cells", "get", "get_smoke",
+           "runnable_cells"]

@@ -1,0 +1,12 @@
+"""The paper's own GEMM workloads (Table V array-level sizes), as configs
+for the benchmark harness and the TPU planner."""
+
+from repro.core.gemm_model import GemmShape
+
+# Array-level GEMM sizes (M, K, N) per precision — Table V.
+ARRAY_GEMMS = {
+    "int8-int32": GemmShape(384, 960, 432),
+    "int8-int16": GemmShape(512, 736, 576),
+    "int8-int8": GemmShape(512, 896, 576),
+    "bf16-bf16": GemmShape(512, 384, 576),
+}

@@ -1,0 +1,74 @@
+"""Architecture registry: --arch <id> resolution + shape-cell accounting.
+
+Each config module defines FULL (the exact assigned configuration) and
+SMOKE (a reduced same-family config for CPU tests).  The registry also
+owns the (arch x shape) cell matrix: which of the four input shapes apply
+to each architecture (long_500k requires a sub-quadratic decode path; see
+DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, List, Optional, Tuple
+
+from repro.models.config import ModelConfig
+
+ARCH_IDS = [
+    "kimi_k2_1t_a32b",
+    "llama4_maverick_400b_a17b",
+    "qwen3_8b",
+    "phi3_medium_14b",
+    "minitron_8b",
+    "smollm_360m",
+    "rwkv6_3b",
+    "jamba_v01_52b",
+    "seamless_m4t_large_v2",
+    "qwen2_vl_72b",
+]
+
+# The assignment's four LM shape cells.
+SHAPES: Dict[str, dict] = {
+    "train_4k": {"seq_len": 4096, "global_batch": 256, "kind": "train"},
+    "prefill_32k": {"seq_len": 32768, "global_batch": 32, "kind": "prefill"},
+    "decode_32k": {"seq_len": 32768, "global_batch": 128, "kind": "decode"},
+    "long_500k": {"seq_len": 524288, "global_batch": 1, "kind": "decode"},
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Cell:
+    arch: str
+    shape: str
+    runnable: bool
+    skip_reason: str = ""
+
+
+def get(arch_id: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{arch_id}")
+    return mod.FULL
+
+
+def get_smoke(arch_id: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{arch_id}")
+    return mod.SMOKE
+
+
+def cells() -> List[Cell]:
+    """All 40 (arch x shape) cells with skip annotations."""
+    out = []
+    for a in ARCH_IDS:
+        cfg = get(a)
+        for s, spec in SHAPES.items():
+            if s == "long_500k" and not cfg.sub_quadratic:
+                out.append(Cell(a, s, False,
+                                "full-attention arch: long_500k requires "
+                                "sub-quadratic decode (DESIGN.md §4)"))
+            else:
+                out.append(Cell(a, s, True))
+    return out
+
+
+def runnable_cells() -> List[Cell]:
+    return [c for c in cells() if c.runnable]

@@ -1,0 +1,25 @@
+"""GAMA core — the paper's contribution as a reusable planning library.
+
+Faithful AIE2 path (validates against the paper's tables):
+    hw.AIE2Device, gemm_model, tile_search.search_aie_tiles,
+    buffer_placement (Algorithm 1), pack, array_map, aiesim, paper_tables.
+
+TPU deployment path (drives the Pallas kernels and sharding policies):
+    hw.TpuChip, tile_search.search_tpu_tiles, planner (GamaPlan).
+"""
+
+from repro.core import hw
+from repro.core.gemm_model import GemmShape, gamma, memory_utilization
+from repro.core.planner import (GamaPlan, GemmSite, best_block_schedule,
+                                best_cascade, plan_block_schedules,
+                                plan_cascade, plan_local_tiles, plan_model)
+from repro.core.tile_search import (PAPER_TILES, TpuTilePlan, best_aie_tile,
+                                    search_aie_tiles, search_tpu_tiles)
+
+__all__ = [
+    "hw", "GemmShape", "gamma", "memory_utilization",
+    "GamaPlan", "GemmSite", "best_block_schedule", "best_cascade",
+    "plan_block_schedules", "plan_cascade", "plan_local_tiles", "plan_model",
+    "PAPER_TILES", "TpuTilePlan", "best_aie_tile", "search_aie_tiles",
+    "search_tpu_tiles",
+]

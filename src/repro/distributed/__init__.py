@@ -1,0 +1,14 @@
+"""Distribution: sharding policies (pjit), explicit cascade collectives
+(shard_map), pipeline parallelism, and gradient compression."""
+
+from repro.distributed.cascade import (cascade_ffn, cascade_ffn_reference,
+                                       cascade_groups, cascade_matmul,
+                                       cross_groups)
+from repro.distributed.compression import (compressed_grad_mean,
+                                           compressed_mean_flat)
+from repro.distributed.pipeline import pipeline_apply
+from repro.distributed.sharding import ShardingPolicy
+
+__all__ = ["cascade_ffn", "cascade_ffn_reference", "cascade_groups",
+           "cascade_matmul", "cross_groups", "compressed_grad_mean",
+           "compressed_mean_flat", "pipeline_apply", "ShardingPolicy"]

@@ -1,0 +1,114 @@
+"""Gradient compression for the data-parallel all-reduce.
+
+int8 block-quantized ring all-reduce with error feedback (1-bit-Adam /
+PowerSGD-family trick, int8 variant): gradients travel the wire as int8 +
+per-block f32 scales (~4x fewer bytes than f32, ~2x vs bf16), and the
+quantization residual is fed back into the next step so the *accumulated*
+error stays bounded.
+
+Wire pattern inside shard_map over the data axis (W devices):
+  1. quantize(g + err)                              local
+  2. all_to_all of the W row-chunks (int8 + scales) 1/W bytes x (W-1)
+  3. local dequant-sum -> this device's reduced chunk
+  4. quantize the reduced chunk; all_gather (int8)  1/W bytes x (W-1)
+  5. dequant -> averaged gradient; err' = (g+err) - dequant(q_local)
+
+This is the distributed-optimization trick the assignment asks for; the
+trainer enables it via --grad_compression=int8.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from jax import shard_map
+
+BLOCK = 256
+
+
+def _quantize(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Per-block symmetric int8 quantization.  x: (T,) f32, T % BLOCK == 0."""
+    xb = x.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(xb), axis=1, keepdims=True) / 127.0
+    safe = jnp.where(scale > 0, scale, 1.0)
+    q = jnp.clip(jnp.round(xb / safe), -127, 127).astype(jnp.int8)
+    return q.reshape(-1), scale.reshape(-1)
+
+
+def _dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return (q.reshape(-1, BLOCK).astype(jnp.float32)
+            * scale[:, None]).reshape(-1)
+
+
+def _pad_to(x: jax.Array, mult: int) -> jax.Array:
+    pad = (-x.size) % mult
+    return jnp.pad(x, (0, pad)) if pad else x
+
+
+def compressed_mean_flat(g: jax.Array, err: jax.Array, axis: str,
+                         world: int) -> Tuple[jax.Array, jax.Array]:
+    """Inside shard_map: mean of flat f32 `g` over `axis` via int8 wire.
+
+    Returns (mean_grad (same shape), new_error_feedback)."""
+    orig = g.size
+    comp = g + err[:orig] if err.size else g
+    flat = _pad_to(comp, world * BLOCK)
+    q, scale = _quantize(flat)
+
+    # Chunked exchange: each device ends up owning chunk `rank`.
+    qc = q.reshape(world, -1)
+    sc = scale.reshape(world, -1)
+    q_all = jax.lax.all_to_all(qc[None], axis, split_axis=1,
+                               concat_axis=0, tiled=True)    # (W, chunk)
+    s_all = jax.lax.all_to_all(sc[None], axis, split_axis=1,
+                               concat_axis=0, tiled=True)
+    contribs = jax.vmap(_dequantize)(q_all, s_all)           # (W, chunk)
+    reduced = jnp.mean(contribs, axis=0)                     # (chunk,)
+
+    # Second hop: broadcast every device's reduced chunk (int8 again).
+    qr, sr = _quantize(reduced)
+    q_full = jax.lax.all_gather(qr, axis, axis=0, tiled=True)
+    s_full = jax.lax.all_gather(sr, axis, axis=0, tiled=True)
+    mean = _dequantize(q_full, s_full)[:orig]
+
+    # Error feedback: what quantization lost this round (local view).
+    new_err = comp - _dequantize(q, scale)[:orig]
+    return mean, new_err
+
+
+def compressed_grad_mean(grads: Any, err: Any, mesh: Mesh,
+                         axis: str = "data") -> Tuple[Any, Any]:
+    """Mean `grads` over the data axis with int8 wire compression.
+
+    grads/err: matching pytrees of f32 arrays (err zeros_like on step 0).
+    Designed for the *manual-DP* trainer path (shard_map over data with
+    per-device gradients); see training/trainer.py.
+    """
+    world = mesh.shape[axis]
+    flat, tree = jax.tree.flatten(grads)
+    eflat = jax.tree.leaves(err)
+
+    def local(*leaves):
+        gs, es = leaves[:len(flat)], leaves[len(flat):]
+        outs, nerrs = [], []
+        for g, e in zip(gs, es):
+            m, ne = compressed_mean_flat(g.reshape(-1).astype(jnp.float32),
+                                         e.reshape(-1), axis, world)
+            outs.append(m.reshape(g.shape).astype(g.dtype))
+            nerrs.append(ne.reshape(g.shape))
+        return tuple(outs) + tuple(nerrs)
+
+    fn = shard_map(
+        local, mesh=mesh,
+        in_specs=tuple(P() for _ in range(2 * len(flat))),
+        out_specs=tuple(P() for _ in range(2 * len(flat))),
+        check_vma=False,
+    )
+    res = fn(*flat, *eflat)
+    mean = jax.tree.unflatten(tree, list(res[:len(flat)]))
+    nerr = jax.tree.unflatten(tree, list(res[len(flat):]))
+    return mean, nerr

@@ -1,0 +1,264 @@
+"""Sharding policy — the (Y, G, X) array mapping re-expressed as
+PartitionSpecs for pjit/GSPMD.
+
+Mapping (DESIGN.md §2): Y -> the data axis (shards M = tokens), the model
+axis carries G x X (shards K and N of every GEMM: column-parallel in,
+row-parallel out — row-parallel *is* the cascade, its partial sums combined
+by the XLA-inserted reduce).  Multi-pod adds a `pod` axis used as outer
+data parallelism (or pipeline stages, see pipeline.py).
+
+Param specs are assigned by leaf path name; activations by `kind` through
+:meth:`ShardingPolicy.act`.  ``fsdp=True`` additionally shards the large
+non-model dim of every weight over the data axis (ZeRO-3 style), which is
+what lets the 1T-param kimi-k2 config fit per-device HBM in the dry run.
+
+The `schedule` knob is the paper's pack-size decision re-cast:
+  * "allreduce"  — residual stream replicated in model axis (Megatron);
+  * "rs_ag"      — residual stream *sequence-sharded* over the model axis
+                   between blocks (sequence parallelism): XLA decomposes
+                   the combine into reduce-scatter + all-gather, the
+                   TPU-native cascade stream.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Leaf = Any
+
+
+@dataclasses.dataclass
+class ShardingPolicy:
+    mesh: Mesh
+    data_axes: Tuple[str, ...] = ("data",)
+    model_axis: str = "model"
+    fsdp: bool = True
+    schedule: str = "rs_ag"          # "allreduce" | "rs_ag"
+
+    # ---------------- parameters ----------------
+
+    def param_spec(self, path: Tuple[str, ...], leaf: Leaf) -> P:
+        """Spec for a param leaf; `path` is the tuple of dict keys.
+
+        Stacked block params carry a leading group axis (never sharded).
+        """
+        name = "/".join(str(p) for p in path)
+        ndim = leaf.ndim
+        stacked = "blocks" in path
+        lead = (None,) if stacked else ()
+        d = ndim - len(lead)
+        fs = self.data_axes[-1] if self.fsdp else None
+        m = self.model_axis
+
+        def spec(*dims):
+            assert len(dims) == d, (name, dims, d)
+            return P(*lead, *dims)
+
+        # --- embeddings / head ---
+        if "embed" in path and "table" in path:
+            return P(m, fs)                       # (vocab, d)
+        if "head" in path:                        # (d, vocab) — also under
+            return P(fs, m)                       # opt-state mu/nu/master
+
+        # --- biases / norms / small vectors ---
+        if d <= 1:
+            return spec(*([None] * d))
+
+        # --- attention ---
+        if "attn" in name:
+            if path[-1] == "w" and "wo" in path:
+                return spec(m, fs)                # row-parallel (cascade)
+            if path[-1] == "w":
+                return spec(fs, m)                # wq/wk/wv column-parallel
+        # --- dense mlp ---
+        if "mlp" in path or "shared" in path:
+            if "down" in path:
+                return spec(m, fs)                # row-parallel (cascade)
+            return spec(fs, m)                    # gate/up column-parallel
+        # --- MoE experts: expert parallelism over the model axis ---
+        if "moe" in path:
+            if path[-1] in ("gate", "up", "down") or (
+                    d == 3 and path[-1] != "router"):
+                return spec(m, fs, None)          # (E, d, f) E-sharded
+            if "router" in path:
+                return spec(None, None)
+        # --- mamba: shard the inner channel dim ---
+        if "mamba" in path:
+            if "in_proj" in path or "x_proj" in path:
+                return spec(fs, m) if "in_proj" in path else spec(m, None)
+            if "dt_proj" in path:
+                return spec(None, m)
+            if "out_proj" in path:
+                return spec(m, fs)
+            if path[-1] in ("conv_w",):
+                return spec(None, m)
+            if path[-1] == "a_log":
+                return spec(m, None)
+        # --- rwkv: shard heads (hidden dim) ---
+        if "rwkv_tm" in path:
+            if path[-1] == "w" and any(k in path for k in
+                                       ("wr", "wk", "wv", "wg")):
+                return spec(fs, m)
+            if path[-1] == "w" and "wo" in path:
+                return spec(m, fs)
+            if path[-1] == "u":
+                return spec(None, None)
+            if "lora" in name or path[-1] in ("mu",):
+                return spec(*([None] * d))
+        if "rwkv_cm" in path:
+            if "wk" in path:
+                return spec(fs, m)
+            if "wv" in path:
+                return spec(m, fs)
+            if "wr" in path:
+                return spec(fs, m)
+        # Default: replicate.
+        return spec(*([None] * d))
+
+    def _sanitize(self, spec: P, shape: Tuple[int, ...]) -> P:
+        """Drop axis assignments whose size does not divide the dim
+        (pjit in_shardings require exact divisibility — e.g. seamless's
+        256206 vocab is not 16-divisible and must stay replicated)."""
+        dims = list(spec) + [None] * (len(shape) - len(spec))
+        out = []
+        for size, d in zip(shape, dims):
+            if d is None:
+                out.append(None)
+                continue
+            axes = d if isinstance(d, tuple) else (d,)
+            total = int(np.prod([self.mesh.shape[a] for a in axes]))
+            out.append(d if size % total == 0 else None)
+        return P(*out)
+
+    def param_sharding(self, params) -> Any:
+        """Pytree of NamedShardings matching `params`."""
+        def one(path, leaf):
+            keys = tuple(getattr(k, "key", getattr(k, "idx", k))
+                         for k in path)
+            spec = self._sanitize(self.param_spec(keys, leaf), leaf.shape)
+            return NamedSharding(self.mesh, spec)
+        return jax.tree_util.tree_map_with_path(one, params)
+
+    # ---------------- batch / activations ----------------
+
+    def dp(self) -> Tuple[str, ...]:
+        return self.data_axes
+
+    def _dp_size(self) -> int:
+        return int(np.prod([self.mesh.shape[a] for a in self.data_axes]))
+
+    def batch_spec(self, batch_size: int, seq_len: int = 0) -> P:
+        """Shard batch over data axes; batch=1 long-context shards seq."""
+        if batch_size % max(1, self._dp_size()) == 0 and batch_size > 1:
+            return P(self.data_axes, None)
+        if seq_len and seq_len % max(1, self._dp_size()) == 0:
+            return P(None, self.data_axes)
+        return P(None, None)
+
+    def batch_sharding(self, batch) -> Any:
+        def one(path, leaf):
+            if leaf.ndim == 0:
+                return NamedSharding(self.mesh, P())
+            spec = self.batch_spec(leaf.shape[0],
+                                   leaf.shape[1] if leaf.ndim > 1 else 0)
+            extra = (None,) * (leaf.ndim - 2)
+            dims = list(spec) + list(extra)
+            return NamedSharding(self.mesh, P(*dims[:leaf.ndim]))
+        return jax.tree_util.tree_map_with_path(one, batch)
+
+    def cache_sharding(self, caches, batch_size: int) -> Any:
+        """KV caches: (groups, B, Hkv, S, D) — shard B over data when
+        divisible; the long-context B=1 cells shard the sequence axis over
+        data instead; KV heads over model when divisible.  Non-attention
+        caches (mamba/rwkv states) shard batch and, when divisible, their
+        channel dim over model."""
+        model_size = self.mesh.shape[self.model_axis]
+
+        def one(path, leaf):
+            keys = tuple(str(getattr(k, "key", getattr(k, "idx", k)))
+                         for k in path)
+            name = "/".join(keys)
+            bdim = None
+            if leaf.ndim >= 2:
+                b = leaf.shape[1]
+                bdim = self.data_axes if b % self._dp_size() == 0 and b > 1 \
+                    else None
+            if leaf.ndim == 5 and ("attn" in name or "cross" in name):
+                h, s = leaf.shape[2], leaf.shape[3]
+                hdim = self.model_axis if h % model_size == 0 else None
+                sdim = None
+                if bdim is None and hdim is None \
+                        and s % self._dp_size() == 0:
+                    sdim = self.data_axes
+                return NamedSharding(self.mesh,
+                                     P(None, bdim, hdim, sdim, None))
+            if leaf.ndim == 4 and "ssm" in name:
+                # (groups, B, di, N): shard the channel dim over model.
+                cdim = self.model_axis \
+                    if leaf.shape[2] % model_size == 0 else None
+                return NamedSharding(self.mesh, P(None, bdim, cdim, None))
+            if leaf.ndim == 4 and "conv" in name:
+                # (groups, B, k-1, di): channel dim is last.
+                cdim = self.model_axis \
+                    if leaf.shape[3] % model_size == 0 else None
+                return NamedSharding(self.mesh, P(None, bdim, None, cdim))
+            if leaf.ndim >= 2:
+                return NamedSharding(
+                    self.mesh, P(None, bdim, *([None] * (leaf.ndim - 2))))
+            return NamedSharding(self.mesh, P())
+        return jax.tree_util.tree_map_with_path(one, caches)
+
+    # ---------------- activation constraints ----------------
+
+    def act(self, x: jax.Array, kind: str) -> jax.Array:
+        """Activation sharding hints by semantic kind (models/layers.py
+        installs this as the shard_hint hook).  These are the constraints
+        GSPMD needs where reshapes make propagation ambiguous (e.g. head
+        splits that do not divide the model axis) — without them it
+        resolves conflicts by replicating whole regions."""
+        m = self.model_axis
+        msize = self.mesh.shape[m]
+        dpsize = self._dp_size()
+
+        def c(*dims):
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(self.mesh, P(*dims)))
+
+        def bdim(size):
+            return self.data_axes if size % dpsize == 0 and size > 1 \
+                else None
+
+        def mdim(size):
+            return m if size % msize == 0 else None
+
+        if kind == "residual" and x.ndim == 3:
+            b, s, _ = x.shape
+            sdim = None
+            if self.schedule == "rs_ag" and s % msize == 0 and s > 1:
+                sdim = m
+            return c(bdim(b), sdim, None)
+        if kind == "heads" and x.ndim == 4:          # (B, H, S, D)
+            b, h, _, _ = x.shape
+            return c(bdim(b), mdim(h), None, None)
+        if kind == "channels" and x.ndim == 3:       # (B, S, C)
+            b, _, ch = x.shape
+            return c(bdim(b), None, mdim(ch))
+        if kind == "logits" and x.ndim == 3:         # (B, S, V)
+            b, _, v = x.shape
+            return c(bdim(b), None, mdim(v))
+        if kind == "tokens2d" and x.ndim == 2:       # (T, d)
+            t, _ = x.shape
+            return c(bdim(t), None)
+        if kind == "experts" and x.ndim == 3:        # (E, C, d/f)
+            e, _, _ = x.shape
+            return c(mdim(e), None, None)
+        if kind == "experts" and x.ndim == 4:        # (G, E, C, d/f)
+            g, e, _, _ = x.shape
+            gdim = self.data_axes if g % dpsize == 0 and g > 1 else None
+            return c(gdim, mdim(e), None, None)
+        return x

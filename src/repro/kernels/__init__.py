@@ -1,0 +1,18 @@
+"""Pallas TPU kernels (validated on CPU via interpret mode).
+
+gemm.py              GAMA GEMM: K-grid cascade accumulation, multi-precision
+flash_attention.py   blocked online-softmax attention (train/prefill)
+decode_attention.py  split-K single-token decode over the KV cache
+wkv.py               WKV6 linear recurrence (RWKV-6) with VMEM state
+ops.py               jit'd public wrappers with planning/padding/dispatch
+ref.py               pure-jnp oracles
+"""
+
+from repro.kernels import ops, ref
+from repro.kernels.decode_attention import flash_decode
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.gemm import gama_gemm
+from repro.kernels.wkv import wkv6
+
+__all__ = ["ops", "ref", "gama_gemm", "flash_attention", "flash_decode",
+           "wkv6"]

@@ -1,0 +1,130 @@
+"""Flash decode — single-token KV-cache attention, split-K over the cache.
+
+The decode shape (one query token, very long KV) is bandwidth-bound: the
+kernel streams the KV cache once, keeping the online-softmax state in
+VMEM.  GQA trick: the ``group = Hq/Hkv`` query heads sharing one KV head
+are stacked into the sublane dimension so the (group, bk) logits block
+feeds the MXU/VPU efficiently — this is the TPU analogue of the paper's
+"pack" reading one stream and producing one combined result.
+
+Grid: (B, Hkv, Sk/bk), KV innermost ("arbitrary"); length masking uses a
+(B, 1) int32 length tensor (production would use scalar prefetch; a VMEM
+(1, 1) block keeps the kernel interpret-validatable).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_LANES = 128
+_NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_ref, l_ref, acc_ref, *,
+                   k_steps: int, bk: int, gp: int, scale: float):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = len_ref[0, 0]
+    k_block_start = ki * bk
+
+    @pl.when(k_block_start < length)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)          # (gp, d)
+        k = k_ref[0, 0].astype(jnp.float32)          # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)          # (bk, d)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # (gp, bk)
+        k_pos = k_block_start + jax.lax.broadcasted_iota(
+            jnp.int32, (gp, bk), 1)
+        valid = k_pos < length
+        s = jnp.where(valid, s, _NEG_INF)
+
+        m_prev = m_ref[...][:, :1]
+        l_prev = l_ref[...][:, :1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.where(valid, jnp.exp(s - m_new), 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(ki == k_steps - 1)
+    def _done():
+        l = l_ref[...][:, :1]
+        safe_l = jnp.where(l > 0.0, l, 1.0)
+        o_ref[0, 0] = (acc_ref[...] / safe_l).astype(o_ref.dtype)
+
+
+def flash_decode(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    length: Optional[jax.Array] = None,
+    bk: int = 512,
+    scale: Optional[float] = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """q: (B, Hq, D); k/v: (B, Hkv, Sk, D); returns (B, Hq, D).
+
+    ``length``: (B,) int32 valid-prefix lengths (defaults to full Sk).
+    The q-head group dimension must be sublane-padded by the caller
+    (ops.py pads Hq/Hkv groups to >= 8 rows).
+    """
+    b, hq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    assert hq % hkv == 0
+    group = hq // hkv
+    assert sk % bk == 0, (sk, bk)
+    if scale is None:
+        scale = d ** -0.5
+    if length is None:
+        length = jnp.full((b,), sk, jnp.int32)
+    len2d = length.reshape(b, 1).astype(jnp.int32)
+    # Stack each KV head's q group into the sublane dim.
+    qg = q.reshape(b, hkv, group, d)
+    k_steps = sk // bk
+    grid = (b, hkv, k_steps)
+
+    kernel = functools.partial(_decode_kernel, k_steps=k_steps, bk=bk,
+                               gp=group, scale=scale)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda bb, h, ki: (bb, 0)),
+            pl.BlockSpec((1, 1, group, d), lambda bb, h, ki: (bb, h, 0, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda bb, h, ki: (bb, h, ki, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda bb, h, ki: (bb, h, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, group, d),
+                               lambda bb, h, ki: (bb, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, group, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((group, _LANES), jnp.float32),
+            pltpu.VMEM((group, _LANES), jnp.float32),
+            pltpu.VMEM((group, d), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+        name="gama_flash_decode",
+    )(len2d, qg, k, v)
+    return out.reshape(b, hq, d)

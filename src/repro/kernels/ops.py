@@ -1,0 +1,156 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Handles tile-size planning (via the GAMA planner), padding to tile
+alignment, GQA group padding, and backend dispatch:
+
+* mode="auto": Pallas kernel on TPU, jnp reference elsewhere (the CPU
+  container validates kernels in interpret mode through tests, but model
+  code falls back to the mathematically-identical ref for speed);
+* mode="kernel": force the Pallas kernel (interpret=True off-TPU);
+* mode="ref": force the jnp oracle.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hw
+from repro.core.tile_search import search_tpu_tiles
+from repro.kernels import ref
+from repro.kernels.decode_attention import flash_decode
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.gemm import gama_gemm
+from repro.kernels.wkv import wkv6
+
+Mode = str  # "auto" | "kernel" | "ref"
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _use_kernel(mode: Mode) -> bool:
+    if mode == "kernel":
+        return True
+    if mode == "ref":
+        return False
+    return on_tpu()
+
+
+def _interpret() -> bool:
+    return not on_tpu()
+
+
+def _round_up(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+def _pick_tiles(m: int, k: int, n: int, dtype) -> tuple[int, int, int]:
+    """Planner-driven tiles, shrunk for small problems."""
+    p = hw.BF16_BF16 if not jnp.issubdtype(dtype, jnp.integer) else hw.INT8_INT8
+    cands = [c for c in (128, 256, 512, 1024) if c <= max(m, 128)]
+    kcands = [c for c in (128, 256, 512, 1024, 2048) if c <= max(k, 128)]
+    ncands = sorted(set(c for c in (128, 256, 512, 1024) if c <= max(n, 128)))
+    plan = search_tpu_tiles(m, k, n, p, candidates=tuple(sorted(set(cands + ncands))),
+                            k_candidates=tuple(kcands))
+    return plan.tm, plan.tk, plan.tn
+
+
+def matmul(a: jax.Array, b: jax.Array, *, out_dtype=None, scale: float = 1.0,
+           tiles: Optional[tuple[int, int, int]] = None,
+           mode: Mode = "auto") -> jax.Array:
+    """GAMA GEMM with padding + planning.  a: (M, K); b: (K, N)."""
+    if not _use_kernel(mode):
+        return ref.ref_gemm(a, b, out_dtype=out_dtype, scale=scale)
+    m, k = a.shape
+    _, n = b.shape
+    tm, tk, tn = tiles or _pick_tiles(m, k, n, a.dtype)
+    tm, tk, tn = min(tm, _round_up(m, 8)), min(tk, _round_up(k, 128)), \
+        min(tn, _round_up(n, 128))
+    mp, kp, np_ = _round_up(m, tm), _round_up(k, tk), _round_up(n, tn)
+    ap = jnp.pad(a, ((0, mp - m), (0, kp - k)))
+    bp = jnp.pad(b, ((0, kp - k), (0, np_ - n)))
+    out = gama_gemm(ap, bp, tm=tm, tk=tk, tn=tn, out_dtype=out_dtype,
+                    scale=scale, interpret=_interpret())
+    return out[:m, :n]
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = True, scale: Optional[float] = None,
+              q_offset: int = 0, bq: int = 128, bk: int = 128,
+              mode: Mode = "auto") -> jax.Array:
+    """Flash attention with seq padding.  q: (B,Hq,Sq,D); kv: (B,Hkv,Sk,D)."""
+    if not _use_kernel(mode):
+        # Long sequences lower the chunked (flash-algorithm) form so the
+        # dry-run's memory analysis reflects the deployed kernel.
+        if k.shape[2] > 2048:
+            return ref.chunked_attention(q, k, v, causal=causal,
+                                         scale=scale, q_offset=q_offset)
+        return ref.ref_attention(q, k, v, causal=causal, scale=scale,
+                                 q_offset=q_offset)
+    b, hq, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    bq = min(bq, _round_up(sq, 8))
+    bk = min(bk, _round_up(sk, 128))
+    sqp, skp = _round_up(sq, bq), _round_up(sk, bk)
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, sqp - sq), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, skp - sk), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, skp - sk), (0, 0)))
+    out = flash_attention(qp, kp, vp, bq=bq, bk=bk, scale=scale,
+                          causal=causal, q_offset=q_offset, kv_len=sk,
+                          interpret=_interpret())
+    return out[:, :, :sq]
+
+
+def decode(q: jax.Array, k: jax.Array, v: jax.Array, *,
+           length: Optional[jax.Array] = None, bk: int = 512,
+           scale: Optional[float] = None, mode: Mode = "auto") -> jax.Array:
+    """Single-token decode attention.  q: (B,Hq,D); kv cache: (B,Hkv,Sk,D)."""
+    if not _use_kernel(mode):
+        return ref.ref_decode_attention(q, k, v, length=length, scale=scale)
+    b, hq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    group = hq // hkv
+    bk = min(bk, _round_up(sk, 128))
+    skp = _round_up(sk, bk)
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, skp - sk), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, skp - sk), (0, 0)))
+    if length is None:
+        length = jnp.full((b,), sk, jnp.int32)
+    # Sublane-pad the GQA group (padded q heads are sliced away below).
+    gp = max(8, group)
+    if gp != group:
+        qg = q.reshape(b, hkv, group, d)
+        qg = jnp.pad(qg, ((0, 0), (0, 0), (0, gp - group), (0, 0)))
+        qq = qg.reshape(b, hkv * gp, d)
+    else:
+        qq = q
+    out = flash_decode(qq, kp, vp, length=length, bk=bk, scale=scale,
+                       interpret=_interpret())
+    if gp != group:
+        out = out.reshape(b, hkv, gp, d)[:, :, :group].reshape(b, hq, d)
+    return out
+
+
+def wkv(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+        u: jax.Array, *, chunk: int = 128, mode: Mode = "auto"
+        ) -> jax.Array:
+    """WKV6 recurrence.  r/k/v/w: (B, H, T, N); u: (H, N) -> (B, H, T, N)."""
+    if not _use_kernel(mode):
+        return ref.ref_wkv(r, k, v, w, u)
+    b, h, t, n = r.shape
+    chunk = min(chunk, t)
+    pad = (-t) % chunk
+    if pad:
+        zp = ((0, 0), (0, 0), (0, pad), (0, 0))
+        # Pad decays with 1 (identity state update); r/k/v with 0 (no-op).
+        r2, k2, v2 = (jnp.pad(x, zp) for x in (r, k, v))
+        w2 = jnp.pad(w, zp, constant_values=1.0)
+    else:
+        r2, k2, v2, w2 = r, k, v, w
+    out = wkv6(r2, k2, v2, w2, u, chunk=chunk, interpret=_interpret())
+    return out[:, :, :t]

@@ -1,0 +1,102 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run entry point.
+
+The two lines above MUST precede every other import (jax locks the device
+count at first init): they give this process 512 placeholder CPU devices
+so ``make_production_mesh`` can build the 16x16 single-pod and 2x16x16
+multi-pod meshes.  Never set that flag globally — tests and benchmarks
+see the real single device.
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen3_8b --shape train_4k
+    python -m repro.launch.dryrun --arch qwen3_8b --shape train_4k --multi_pod
+    python -m repro.launch.dryrun --all --out experiments/dryrun
+"""
+
+import argparse
+import json
+import sys
+import traceback
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default=None)
+    ap.add_argument("--shape", type=str, default=None)
+    ap.add_argument("--multi_pod", action="store_true")
+    ap.add_argument("--schedule", type=str, default="rs_ag",
+                    choices=["rs_ag", "allreduce"])
+    ap.add_argument("--no_fsdp", action="store_true")
+    ap.add_argument("--no_remat", action="store_true")
+    ap.add_argument("--rope_dtype", type=str, default="float32",
+                    choices=["float32", "compute"])
+    ap.add_argument("--moe_groups", type=int, default=1)
+    ap.add_argument("--remat_policy", type=str, default="full",
+                    choices=["full", "dots", "tp_outs"])
+    ap.add_argument("--serve_dtype", type=str, default=None)
+    ap.add_argument("--train_dtype", type=str, default=None)
+    ap.add_argument("--all", action="store_true",
+                    help="run every runnable (arch x shape) cell")
+    ap.add_argument("--out", type=str, default=None,
+                    help="output JSON file (single cell) or directory "
+                         "(--all)")
+    args = ap.parse_args()
+
+    from repro import configs as C
+    from repro.launch.dryrun_lib import run_cell
+
+    def one(arch, shape, multi_pod):
+        rec = run_cell(arch, shape, multi_pod=multi_pod,
+                       schedule=args.schedule, fsdp=not args.no_fsdp,
+                       remat=not args.no_remat, rope_dtype=args.rope_dtype,
+                       moe_groups=args.moe_groups,
+                       remat_policy=args.remat_policy,
+                       serve_dtype=args.serve_dtype,
+                       train_dtype=args.train_dtype)
+        print(f"[dryrun] {arch} x {shape} x "
+              f"{'2x16x16' if multi_pod else '16x16'}: "
+              f"compile={rec['compile_s']}s "
+              f"mem/dev={rec['memory']['peak_per_device_gib']}GiB "
+              f"coll/dev={rec['collectives']['total_bytes_per_device']/2**30:.2f}GiB "
+              f"dominant={rec['roofline']['dominant']}")
+        print(f"  memory_analysis: args={rec['memory']['argument_bytes']} "
+              f"temp={rec['memory']['temp_bytes']} "
+              f"out={rec['memory']['output_bytes']}")
+        print(f"  cost_analysis: {rec['cost_analysis']}")
+        return rec
+
+    if args.all:
+        import os as _os
+        outdir = args.out or "experiments/dryrun"
+        _os.makedirs(outdir, exist_ok=True)
+        failures = []
+        for cell in C.runnable_cells():
+            for mp in (False, True):
+                tag = f"{cell.arch}__{cell.shape}__{'mp' if mp else 'sp'}"
+                path = _os.path.join(outdir, tag + ".json")
+                if _os.path.exists(path):
+                    continue
+                try:
+                    rec = one(cell.arch, cell.shape, mp)
+                    with open(path, "w") as f:
+                        json.dump(rec, f, indent=1)
+                except Exception:  # noqa: BLE001
+                    failures.append(tag)
+                    traceback.print_exc()
+        if failures:
+            print("FAILED cells:", failures)
+            return 1
+        return 0
+
+    assert args.arch and args.shape, "--arch and --shape (or --all)"
+    rec = one(args.arch, args.shape, args.multi_pod)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(rec, f, indent=1)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

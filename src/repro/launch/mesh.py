@@ -1,0 +1,28 @@
+"""Production mesh construction.
+
+Defined as a FUNCTION (not a module-level constant) so importing this
+module never touches jax device state — the dry-run sets the placeholder
+device count before any jax initialization.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; multi_pod adds a 2-pod leading axis."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(model: int = 2, data: int = 0):
+    """Small mesh over whatever devices exist (tests/examples on CPU)."""
+    n = len(jax.devices())
+    data = data or max(1, n // model)
+    return jax.make_mesh(
+        (data, model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)

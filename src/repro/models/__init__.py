@@ -1,0 +1,9 @@
+"""Model zoo substrate: pattern-cycled blocks covering dense GQA
+transformers, MoE, Mamba, RWKV6, encoder-decoder and VLM backbones."""
+
+from repro.models.config import BlockSpec, ModelConfig
+from repro.models.model import (decode_step, forward, init_cache,
+                                init_params, loss_fn, param_count, prefill)
+
+__all__ = ["BlockSpec", "ModelConfig", "decode_step", "forward",
+           "init_cache", "init_params", "loss_fn", "param_count", "prefill"]

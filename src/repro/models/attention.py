@@ -1,0 +1,132 @@
+"""Grouped-query attention with RoPE / M-RoPE, qk-norm, and KV caching.
+
+Supports the four execution shapes the assignment exercises:
+  * train:   full causal self-attention, no cache;
+  * prefill: causal self-attention that also writes the KV cache;
+  * decode:  one new token against a cached KV prefix (flash-decode path);
+  * cross:   encoder-decoder cross attention (cache holds encoder KV).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+from repro.models import layers as L
+
+Params = Dict[str, Any]
+
+
+def init_attention(rng, d_model: int, n_heads: int, n_kv_heads: int,
+                   d_head: int, qk_norm: bool = False,
+                   dtype=jnp.float32) -> Params:
+    rq, rk, rv, ro = jax.random.split(rng, 4)
+    p = {
+        "wq": L.dense_init(rq, d_model, n_heads * d_head, dtype),
+        "wk": L.dense_init(rk, d_model, n_kv_heads * d_head, dtype),
+        "wv": L.dense_init(rv, d_model, n_kv_heads * d_head, dtype),
+        "wo": L.dense_init(ro, n_heads * d_head, d_model, dtype),
+    }
+    if qk_norm:
+        p["q_norm"] = L.norm_init(d_head, dtype)
+        p["k_norm"] = L.norm_init(d_head, dtype)
+    return p
+
+
+def init_kv_cache(batch: int, n_kv_heads: int, max_len: int, d_head: int,
+                  dtype=jnp.bfloat16) -> Params:
+    return {
+        "k": jnp.zeros((batch, n_kv_heads, max_len, d_head), dtype),
+        "v": jnp.zeros((batch, n_kv_heads, max_len, d_head), dtype),
+    }
+
+
+def attention(
+    p: Params,
+    x: jax.Array,                       # (B, S, d_model)
+    *,
+    n_heads: int,
+    n_kv_heads: int,
+    d_head: int,
+    positions: Optional[jax.Array] = None,     # (B, S) or (B, S, 3) M-RoPE
+    rope_theta: float = 10000.0,
+    mrope_sections: Optional[Tuple[int, ...]] = None,
+    qk_norm: bool = False,
+    causal: bool = True,
+    cache: Optional[Params] = None,
+    cache_pos: Optional[jax.Array] = None,      # scalar write offset
+    kv_from: Optional[jax.Array] = None,        # encoder states (cross-attn)
+    use_cached_kv: bool = False,                # decode-time cross attention
+    attn_mode: str = "auto",
+) -> Tuple[jax.Array, Optional[Params]]:
+    """Returns (output (B, S, d_model), updated cache)."""
+    b, s, _ = x.shape
+    q = L.dense(p["wq"], x).reshape(b, s, n_heads, d_head)
+
+    if use_cached_kv:
+        # Cross-attention after prefill: KV was computed from the encoder
+        # once and lives in the cache; no projection, no cache update.
+        assert cache is not None
+        if qk_norm:
+            q = L.rmsnorm(p["q_norm"], q)
+        q = q.transpose(0, 2, 1, 3)
+        k = cache["k"].astype(x.dtype)
+        v = cache["v"].astype(x.dtype)
+        if s == 1:
+            length = jnp.full((b,), k.shape[2], jnp.int32)
+            out = kops.decode(q[:, :, 0], k, v, length=length,
+                              mode=attn_mode)[:, :, None]
+        else:
+            out = kops.attention(q, k, v, causal=False, mode=attn_mode)
+        out = out.transpose(0, 2, 1, 3).reshape(b, s, n_heads * d_head)
+        return L.dense(p["wo"], out), cache
+
+    kv_src = x if kv_from is None else kv_from
+    sk = kv_src.shape[1]
+    k = L.dense(p["wk"], kv_src).reshape(b, sk, n_kv_heads, d_head)
+    v = L.dense(p["wv"], kv_src).reshape(b, sk, n_kv_heads, d_head)
+
+    if qk_norm:
+        q = L.rmsnorm(p["q_norm"], q)
+        k = L.rmsnorm(p["k_norm"], k)
+
+    use_rope = kv_from is None and positions is not None
+    if use_rope:
+        if mrope_sections is not None:
+            angles = L.mrope_angles(positions, d_head, mrope_sections,
+                                    rope_theta)
+        else:
+            angles = L.rope_angles(positions, d_head, rope_theta)
+        q = L.apply_rope(q, angles)
+        k = L.apply_rope(k, angles)
+
+    q = L.shard_hint(q.transpose(0, 2, 1, 3), "heads")    # (B, H, S, D)
+    k = L.shard_hint(k.transpose(0, 2, 1, 3), "heads")    # (B, Hkv, Sk, D)
+    v = L.shard_hint(v.transpose(0, 2, 1, 3), "heads")
+
+    new_cache = None
+    if cache is not None:
+        pos = 0 if cache_pos is None else cache_pos
+        ck = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, 0, pos, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, 0, pos, 0))
+        new_cache = {"k": ck, "v": cv}
+        k, v = ck.astype(x.dtype), cv.astype(x.dtype)
+
+    if s == 1 and cache is not None:
+        # Decode: one token against the cached prefix.
+        length = (cache_pos + 1) * jnp.ones((b,), jnp.int32)
+        out = kops.decode(q[:, :, 0], k, v, length=length, mode=attn_mode)
+        out = out[:, :, None]                       # (B, H, 1, D)
+    else:
+        q_off = 0 if cache_pos is None else cache_pos
+        out = kops.attention(q, k, v, causal=causal and kv_from is None,
+                             q_offset=q_off, mode=attn_mode)
+
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, n_heads * d_head)
+    out = L.shard_hint(out, "channels")
+    return L.dense(p["wo"], out), new_cache

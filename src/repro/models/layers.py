@@ -1,0 +1,236 @@
+"""Shared layers: norms, rotary embeddings (incl. M-RoPE), MLPs, embeddings.
+
+All layers are pure functions over param dicts (pytrees).  Every matmul
+routes through :func:`gemm` so the GAMA Pallas kernel can be swapped in on
+TPU (models default to jnp for CPU smoke tests and the dry-run, which is
+mathematically identical — see kernels/ops.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+from repro.serving.quant import maybe_dequant
+
+Params = Dict[str, Any]
+
+# ---------------------------------------------------------------------------
+# GEMM indirection — the GAMA integration point
+# ---------------------------------------------------------------------------
+
+_GEMM_MODE = "ref"   # "ref" (jnp) | "kernel" (Pallas) — set by set_gemm_mode
+
+
+def set_gemm_mode(mode: str) -> None:
+    global _GEMM_MODE
+    assert mode in ("ref", "kernel", "auto")
+    _GEMM_MODE = mode
+
+
+# Activation-sharding hook: the launcher installs a policy callback
+# (ShardingPolicy.act) and model code marks tensors with semantic kinds
+# ("residual", "heads", "channels", ...).  Identity when unset (smoke
+# tests, single-device runs).  GSPMD needs these hints at the points
+# where reshapes make propagation ambiguous (e.g. head splits that do
+# not divide the model axis) — without them it falls back to replication.
+_SHARD_HOOK = None
+
+
+def set_shard_hook(fn) -> None:
+    global _SHARD_HOOK
+    _SHARD_HOOK = fn
+
+
+def shard_hint(x: jax.Array, kind: str) -> jax.Array:
+    if _SHARD_HOOK is None:
+        return x
+    return _SHARD_HOOK(x, kind)
+
+
+def gemm(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x: (..., K) @ w: (K, N) -> (..., N), via the GAMA kernel when on."""
+    if _GEMM_MODE == "ref" or (_GEMM_MODE == "auto" and not kops.on_tpu()):
+        return x @ w
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    out = kops.matmul(x2, w, mode="kernel")
+    return out.reshape(*lead, w.shape[-1])
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(rng, d_in: int, d_out: int, dtype=jnp.float32,
+               scale: Optional[float] = None) -> Params:
+    scale = (1.0 / d_in) ** 0.5 if scale is None else scale
+    return {"w": jax.random.normal(rng, (d_in, d_out), dtype) * scale}
+
+
+def dense(p: Params, x: jax.Array) -> jax.Array:
+    y = gemm(x, maybe_dequant(p["w"], x.dtype))
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def norm_init(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+    return out.astype(dt)
+
+
+def layernorm_init(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    out = out * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return out.astype(dt)
+
+
+def groupnorm(x: jax.Array, n_groups: int, scale: jax.Array,
+              bias: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """GroupNorm over the channel dim (used by RWKV's wkv output)."""
+    dt = x.dtype
+    *lead, d = x.shape
+    xf = x.astype(jnp.float32).reshape(*lead, n_groups, d // n_groups)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    out = ((xf - mu) * jax.lax.rsqrt(var + eps)).reshape(*lead, d)
+    out = out * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+    return out.astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (standard + M-RoPE)
+# ---------------------------------------------------------------------------
+
+
+def rope_angles(positions: jax.Array, d_head: int,
+                theta: float = 10000.0) -> jax.Array:
+    """positions: (..., S) -> angles (..., S, d_head//2)."""
+    inv_freq = 1.0 / (theta ** (jnp.arange(0, d_head, 2,
+                                           dtype=jnp.float32) / d_head))
+    return positions[..., None].astype(jnp.float32) * inv_freq
+
+
+def mrope_angles(positions: jax.Array, d_head: int,
+                 sections: Sequence[int],
+                 theta: float = 10000.0) -> jax.Array:
+    """M-RoPE (Qwen2-VL): positions (..., S, 3) = (t, h, w) coordinates.
+
+    The d_head//2 frequency slots are split into `sections` (t, h, w
+    section sizes, summing to d_head//2); each section rotates by its own
+    coordinate.  Text tokens use t == h == w, recovering standard RoPE.
+    """
+    half = d_head // 2
+    assert sum(sections) == half, (sections, d_head)
+    inv_freq = 1.0 / (theta ** (jnp.arange(0, d_head, 2,
+                                           dtype=jnp.float32) / d_head))
+    # Which coordinate (0=t, 1=h, 2=w) each frequency slot rotates by.
+    select = jnp.repeat(jnp.arange(3), jnp.asarray(sections),
+                        total_repeat_length=half)
+    pos_sel = positions[..., select]            # (..., S, half)
+    return pos_sel.astype(jnp.float32) * inv_freq
+
+
+# RoPE application dtype: "float32" (default, max accuracy) or "compute"
+# (multiply in the activation dtype — halves the bytes of any collective
+# XLA hoists across the rotation; angles/sin/cos stay f32).  §Perf lever.
+_ROPE_DTYPE = "float32"
+
+
+def set_rope_dtype(mode: str) -> None:
+    global _ROPE_DTYPE
+    assert mode in ("float32", "compute")
+    _ROPE_DTYPE = mode
+
+
+def apply_rope(x: jax.Array, angles: jax.Array) -> jax.Array:
+    """x: (B, S, H, D); angles: (B, S, D//2) (broadcast over heads)."""
+    dt = x.dtype
+    wdt = jnp.float32 if _ROPE_DTYPE == "float32" else dt
+    xf = x.astype(wdt)
+    x1, x2 = jnp.split(xf, 2, axis=-1)
+    cos = jnp.cos(angles).astype(wdt)[..., None, :]
+    sin = jnp.sin(angles).astype(wdt)[..., None, :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                          axis=-1)
+    return out.astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(rng, d_model: int, d_ff: int, kind: str = "swiglu",
+             dtype=jnp.float32) -> Params:
+    r1, r2, r3 = jax.random.split(rng, 3)
+    p = {"down": dense_init(r2, d_ff, d_model, dtype)}
+    if kind == "swiglu":
+        p["gate"] = dense_init(r1, d_model, d_ff, dtype)
+        p["up"] = dense_init(r3, d_model, d_ff, dtype)
+    else:
+        p["up"] = dense_init(r1, d_model, d_ff, dtype)
+    return p
+
+
+def mlp(p: Params, x: jax.Array, kind: str = "swiglu") -> jax.Array:
+    if kind == "swiglu":
+        h = jax.nn.silu(dense(p["gate"], x)) * dense(p["up"], x)
+    else:
+        h = jax.nn.gelu(dense(p["up"], x))
+    h = shard_hint(h, "channels")
+    return dense(p["down"], h)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def embedding_init(rng, vocab: int, d_model: int, dtype=jnp.float32) -> Params:
+    return {"table": jax.random.normal(rng, (vocab, d_model), dtype) * 0.02}
+
+
+def embed(p: Params, tokens: jax.Array, dtype) -> jax.Array:
+    return maybe_dequant(p["table"], dtype)[tokens]
+
+
+def logits(p: Params, x: jax.Array, head: Optional[Params]) -> jax.Array:
+    """Tied (embed.T) or separate head; returns f32 logits."""
+    if head is not None:
+        out = dense(head, x).astype(jnp.float32)
+    else:
+        out = gemm(x, maybe_dequant(p["table"], x.dtype).T).astype(
+            jnp.float32)
+    return shard_hint(out, "logits")
+
+
+def cross_entropy(logits_: jax.Array, labels: jax.Array,
+                  mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean token cross-entropy; logits (B,S,V) f32, labels (B,S) int."""
+    logp = jax.nn.log_softmax(logits_, axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    if mask is None:
+        return -jnp.mean(ll)
+    return -jnp.sum(ll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,175 @@
+"""Mamba (S6 selective SSM) block — used by the Jamba hybrid architecture.
+
+Training/prefill uses a *chunked* associative scan: within a chunk the
+diagonal recurrence h_t = a_t * h_{t-1} + b_t is evaluated with
+``jax.lax.associative_scan`` (parallel), and chunks are chained with a
+``lax.scan`` carry — this bounds the materialized (B, chunk, d_inner,
+d_state) tensor, which a naive full-sequence associative scan would blow
+up to seq_len x d_inner x d_state (tens of GB at Jamba scale).
+
+Decode keeps (conv window, ssm state) as an O(1) cache — the property that
+makes the hybrid run the long_500k cell.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.serving.quant import maybe_dequant
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaConfig:
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    dt_rank: Optional[int] = None      # default ceil(d_model / 16)
+    chunk: int = 256                   # scan chunk length
+
+    def resolve_dt_rank(self, d_model: int) -> int:
+        return self.dt_rank or -(-d_model // 16)
+
+
+def init_mamba(rng, d_model: int, cfg: MambaConfig,
+               dtype=jnp.float32) -> Params:
+    di = cfg.expand * d_model
+    dt_rank = cfg.resolve_dt_rank(d_model)
+    r = jax.random.split(rng, 6)
+    # S4D-real initialization for A; dt bias init for stable softplus.
+    a_init = jnp.tile(jnp.arange(1, cfg.d_state + 1,
+                                 dtype=jnp.float32)[None, :], (di, 1))
+    return {
+        "in_proj": L.dense_init(r[0], d_model, 2 * di, dtype),
+        "conv_w": jax.random.normal(r[1], (cfg.d_conv, di), dtype) * 0.2,
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": L.dense_init(r[2], di, dt_rank + 2 * cfg.d_state, dtype),
+        "dt_proj": {
+            "w": jax.random.normal(r[3], (dt_rank, di), dtype)
+            * dt_rank ** -0.5,
+            "b": jnp.log(jnp.expm1(
+                jnp.clip(jax.random.uniform(r[4], (di,)) * 0.099 + 0.001,
+                         1e-4, None))).astype(dtype),
+        },
+        "a_log": jnp.log(a_init),
+        "d": jnp.ones((di,), jnp.float32),
+        "out_proj": L.dense_init(r[5], di, d_model, dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: Optional[jax.Array] = None
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv1d.  x: (B, S, di); w: (k, di).
+
+    `state`: (B, k-1, di) trailing window from the previous call; returns
+    (y, new_state)."""
+    k = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], k - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)        # (B, S+k-1, di)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype)
+            for i in range(k))
+    new_state = xp[:, -(k - 1):] if k > 1 else state
+    return y + b.astype(x.dtype), new_state
+
+
+def _ssm_scan_chunked(da: jax.Array, db: jax.Array, h0: jax.Array,
+                      chunk: int) -> Tuple[jax.Array, jax.Array]:
+    """h_t = da_t * h_{t-1} + db_t over axis 1.  da/db: (B, S, di, N).
+
+    Returns (h over all t, final h).  Chunked: associative scan inside a
+    chunk, sequential carry across chunks.
+    """
+    b, s, di, n = da.shape
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        da = jnp.concatenate(
+            [da, jnp.ones((b, pad, di, n), da.dtype)], axis=1)
+        db = jnp.concatenate(
+            [db, jnp.zeros((b, pad, di, n), db.dtype)], axis=1)
+    nc = da.shape[1] // chunk
+    da_c = da.reshape(b, nc, chunk, di, n).transpose(1, 0, 2, 3, 4)
+    db_c = db.reshape(b, nc, chunk, di, n).transpose(1, 0, 2, 3, 4)
+
+    def combine(l, r):
+        (a1, b1), (a2, b2) = l, r
+        return a1 * a2, a2 * b1 + b2
+
+    def step(h, inputs):
+        a_ch, b_ch = inputs            # (B, chunk, di, N)
+        pa, pb = jax.lax.associative_scan(combine, (a_ch, b_ch), axis=1)
+        h_all = pb + pa * h[:, None]   # (B, chunk, di, N)
+        return h_all[:, -1], h_all
+
+    h_final, h_chunks = jax.lax.scan(step, h0, (da_c, db_c))
+    h_all = h_chunks.transpose(1, 0, 2, 3, 4).reshape(b, nc * chunk, di, n)
+    return h_all[:, :s], h_final
+
+
+def mamba_forward(p: Params, x: jax.Array, cfg: MambaConfig,
+                  cache: Optional[Params] = None
+                  ) -> Tuple[jax.Array, Optional[Params]]:
+    """x: (B, S, d_model) -> (out, new_cache).
+
+    cache = {"conv": (B, k-1, di), "ssm": (B, di, N)} for decode.
+    """
+    b, s, d = x.shape
+    di = cfg.expand * d
+    n = cfg.d_state
+    dt_rank = cfg.resolve_dt_rank(d)
+
+    xz = L.dense(p["in_proj"], x)
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xin = L.shard_hint(xin, "channels")
+    z = L.shard_hint(z, "channels")
+
+    conv_state = cache["conv"] if cache is not None else None
+    xin, new_conv = _causal_conv(xin, p["conv_w"], p["conv_b"], conv_state)
+    xin = jax.nn.silu(xin)
+
+    xdb = L.dense(p["x_proj"], xin)
+    dt, bmat, cmat = jnp.split(xdb, [dt_rank, dt_rank + n], axis=-1)
+    dt = jax.nn.softplus(dt @ maybe_dequant(p["dt_proj"]["w"], x.dtype)
+                         + p["dt_proj"]["b"].astype(x.dtype))  # (B,S,di)
+    a = -jnp.exp(p["a_log"])                                   # (di, N) f32
+
+    dtf = dt.astype(jnp.float32)
+    da = jnp.exp(dtf[..., None] * a)                           # (B,S,di,N)
+    dbx = (dtf * xin.astype(jnp.float32))[..., None] \
+        * bmat.astype(jnp.float32)[:, :, None, :]              # (B,S,di,N)
+
+    h0 = cache["ssm"] if cache is not None else jnp.zeros((b, di, n),
+                                                          jnp.float32)
+    if s == 1:
+        h = da[:, 0] * h0 + dbx[:, 0]
+        h_all = h[:, None]
+        h_final = h
+    else:
+        h_all, h_final = _ssm_scan_chunked(da, dbx, h0, cfg.chunk)
+
+    y = jnp.einsum("bsdn,bsn->bsd", h_all,
+                   cmat.astype(jnp.float32)).astype(x.dtype)
+    y = y + xin * p["d"].astype(x.dtype)
+    out = L.dense(p["out_proj"], y * jax.nn.silu(z))
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": new_conv, "ssm": h_final}
+    return out, new_cache
+
+
+def init_mamba_cache(batch: int, d_model: int, cfg: MambaConfig,
+                     dtype=jnp.bfloat16) -> Params:
+    di = cfg.expand * d_model
+    return {
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, di), dtype),
+        "ssm": jnp.zeros((batch, di, cfg.d_state), jnp.float32),
+    }

@@ -1,0 +1,191 @@
+"""RWKV-6 (Finch) block — attention-free, data-dependent decay.
+
+Implements the time-mix (WKV6) and channel-mix sub-blocks of
+arXiv:2404.05892.  The WKV state is a per-head (N x N) matrix updated as
+
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    y_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+
+with w_t a *data-dependent* per-channel decay (the paper's headline
+feature) produced by a low-rank MLP, and token-shift interpolation
+(ddlerp) mixing each input with its predecessor.
+
+Training/prefill runs the recurrence with ``lax.scan`` over time (state is
+O(H*N^2), so the while-loop body stays small); decode is a single O(1)
+state update — which is what lets rwkv6-3b run the long_500k cell with a
+fixed-size cache.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.serving.quant import maybe_dequant
+
+Params = Dict[str, Any]
+
+_MIX_NAMES = ("w", "k", "v", "r", "g")
+
+
+@dataclasses.dataclass(frozen=True)
+class RwkvConfig:
+    head_size: int = 64
+    lora_mix: int = 32      # ddlerp low-rank size
+    lora_decay: int = 64    # decay-lora low-rank size
+
+
+def init_time_mix(rng, d: int, cfg: RwkvConfig, dtype=jnp.float32) -> Params:
+    h = d // cfg.head_size
+    r = jax.random.split(rng, 10)
+    return {
+        "mu_x": jnp.full((d,), 0.5, dtype),
+        "mu": jnp.full((5, d), 0.5, dtype),
+        "lora_a": jax.random.normal(r[0], (d, 5 * cfg.lora_mix), dtype)
+        * d ** -0.5,
+        "lora_b": jax.random.normal(r[1], (5, cfg.lora_mix, d), dtype)
+        * cfg.lora_mix ** -0.5 * 0.1,
+        "w0": jnp.full((d,), -6.0, dtype),   # exp(-exp(-6)) ~ slow decay
+        "w_lora_a": jax.random.normal(r[2], (d, cfg.lora_decay), dtype)
+        * d ** -0.5,
+        "w_lora_b": jax.random.normal(r[3], (cfg.lora_decay, d), dtype)
+        * cfg.lora_decay ** -0.5 * 0.1,
+        "u": jax.random.normal(r[4], (h, cfg.head_size), dtype) * 0.1,
+        "wr": L.dense_init(r[5], d, d, dtype),
+        "wk": L.dense_init(r[6], d, d, dtype),
+        "wv": L.dense_init(r[7], d, d, dtype),
+        "wg": L.dense_init(r[8], d, d, dtype),
+        "wo": L.dense_init(r[9], d, d, dtype),
+        "gn_scale": jnp.ones((d,), dtype),
+        "gn_bias": jnp.zeros((d,), dtype),
+    }
+
+
+def init_channel_mix(rng, d: int, d_ff: int, dtype=jnp.float32) -> Params:
+    r = jax.random.split(rng, 3)
+    return {
+        "mu_k": jnp.full((d,), 0.5, dtype),
+        "mu_r": jnp.full((d,), 0.5, dtype),
+        "wk": L.dense_init(r[0], d, d_ff, dtype),
+        "wv": L.dense_init(r[1], d_ff, d, dtype),
+        "wr": L.dense_init(r[2], d, d, dtype),
+    }
+
+
+def _shift(x: jax.Array, prev: Optional[jax.Array]) -> jax.Array:
+    """Token shift: x_{t-1}; `prev` (B, d) is the cached last token."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, 0])
+    return jnp.concatenate([prev[:, None], x[:, :-1]], axis=1)
+
+
+def _ddlerp(p: Params, x: jax.Array, xx: jax.Array) -> Dict[str, jax.Array]:
+    """Data-dependent lerp producing the five mixed inputs (w,k,v,r,g)."""
+    x_base = x + xx * p["mu_x"].astype(x.dtype)
+    lora = jnp.tanh(L.gemm(x_base, maybe_dequant(p["lora_a"], x.dtype)))
+    b, s, _ = x.shape
+    lora = lora.reshape(b, s, 5, -1)
+    out = {}
+    for i, name in enumerate(_MIX_NAMES):
+        mix = p["mu"][i].astype(x.dtype) \
+            + L.gemm(lora[:, :, i], maybe_dequant(p["lora_b"],
+                                                  x.dtype)[i])
+        out[name] = x + xx * mix
+    return out
+
+
+def _wkv_step(state, inputs):
+    """state: (B,H,N,N); inputs r,k,v: (B,H,N), w: (B,H,N)."""
+    r, k, v, w, u = inputs
+    a = k[..., :, None] * v[..., None, :]            # (B,H,N,N) outer
+    y = jnp.einsum("bhn,bhnm->bhm", r, state + u[..., :, None] * a)
+    new_state = w[..., :, None] * state + a
+    return new_state, y
+
+
+def time_mix(p: Params, x: jax.Array, cfg: RwkvConfig,
+             cache: Optional[Params] = None
+             ) -> Tuple[jax.Array, Optional[Params]]:
+    """x: (B, S, d).  cache = {"shift": (B,d), "wkv": (B,H,N,N)}."""
+    b, s, d = x.shape
+    n = cfg.head_size
+    h = d // n
+
+    prev = cache["shift_tm"] if cache is not None else None
+    xx = _shift(x, prev) - x
+    mixed = _ddlerp(p, x, xx)
+
+    r = L.shard_hint(L.dense(p["wr"], mixed["r"]), "channels")
+    k = L.shard_hint(L.dense(p["wk"], mixed["k"]), "channels")
+    v = L.shard_hint(L.dense(p["wv"], mixed["v"]), "channels")
+    r, k, v = (t.reshape(b, s, h, n) for t in (r, k, v))
+    g = jax.nn.silu(L.dense(p["wg"], mixed["g"]))
+
+    w_lora = L.gemm(jnp.tanh(L.gemm(mixed["w"],
+                                    maybe_dequant(p["w_lora_a"], x.dtype))),
+                    maybe_dequant(p["w_lora_b"], x.dtype))
+    w = jnp.exp(-jnp.exp((p["w0"].astype(jnp.float32)
+                          + w_lora.astype(jnp.float32))))   # (B,S,d) in (0,1)
+    w = w.reshape(b, s, h, n)
+
+    u = p["u"].astype(jnp.float32)
+    if cache is None:
+        # Training/prefill from zero state: the GAMA WKV6 kernel path
+        # (kernels/wkv.py; pure-jnp oracle off-TPU — identical math).
+        # B and H stay separate dims so batch sharding survives.
+        from repro.kernels import ops as kops
+        bhsn = lambda z: z.transpose(0, 2, 1, 3)  # noqa: E731
+        y = kops.wkv(bhsn(r), bhsn(k), bhsn(v), bhsn(w), u)
+        y = y.transpose(0, 2, 1, 3).reshape(b, s, d).astype(x.dtype)
+        s_final = None
+    else:
+        s0 = cache["wkv"]
+        rf = r.astype(jnp.float32).transpose(1, 0, 2, 3)   # (S,B,H,N)
+        kf = k.astype(jnp.float32).transpose(1, 0, 2, 3)
+        vf = v.astype(jnp.float32).transpose(1, 0, 2, 3)
+        wf = w.transpose(1, 0, 2, 3)
+        uf = jnp.broadcast_to(u, (s, b, h, n))
+        s_final, ys = jax.lax.scan(_wkv_step, s0, (rf, kf, vf, wf, uf))
+        y = ys.transpose(1, 0, 2, 3).reshape(b, s, d).astype(x.dtype)
+
+    y = L.groupnorm(y, h, p["gn_scale"], p["gn_bias"], eps=64e-5)
+    out = L.dense(p["wo"], y * g)
+
+    new_cache = None
+    if cache is not None:
+        new_cache = dict(cache)
+        new_cache["shift_tm"] = x[:, -1]
+        new_cache["wkv"] = s_final
+    return out, new_cache
+
+
+def channel_mix(p: Params, x: jax.Array,
+                cache: Optional[Params] = None
+                ) -> Tuple[jax.Array, Optional[Params]]:
+    prev = cache["shift_cm"] if cache is not None else None
+    xx = _shift(x, prev) - x
+    xk = x + xx * p["mu_k"].astype(x.dtype)
+    xr = x + xx * p["mu_r"].astype(x.dtype)
+    k = jnp.square(jax.nn.relu(L.dense(p["wk"], xk)))
+    v = L.dense(p["wv"], k)
+    r = jax.nn.sigmoid(L.dense(p["wr"], xr))
+    new_cache = None
+    if cache is not None:
+        new_cache = dict(cache)
+        new_cache["shift_cm"] = x[:, -1]
+    return r * v, new_cache
+
+
+def init_rwkv_cache(batch: int, d_model: int, cfg: RwkvConfig,
+                    dtype=jnp.bfloat16) -> Params:
+    h = d_model // cfg.head_size
+    return {
+        "shift_tm": jnp.zeros((batch, d_model), dtype),
+        "shift_cm": jnp.zeros((batch, d_model), dtype),
+        "wkv": jnp.zeros((batch, h, cfg.head_size, cfg.head_size),
+                         jnp.float32),
+    }

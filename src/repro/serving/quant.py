@@ -1,0 +1,94 @@
+"""int8 weight quantization for serving — the paper's multi-precision
+GEMM (int8 x int8 -> int32 with requantize epilogues) as a framework
+feature.
+
+Per-channel symmetric quantization: W[k, n] -> q[k, n] int8 with one f32
+scale per output channel n.  At serve time the matmul runs through the
+GAMA int8 kernel (int32 accumulate) and dequantizes in the epilogue —
+activations stay bf16/f32, so this is weight-only (W8A16) quantization,
+matching the paper's int8-input / wider-output operating points.
+
+On TPU the Pallas kernel performs x-quantize + int8 MXU GEMM; on this
+host the reference path computes the mathematically identical
+dequantized matmul.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+# Param-leaf name suffixes that hold (in, out) matmul weights.
+_QUANT_KEYS = ("w",)
+_MIN_SIZE = 1 << 14      # don't quantize tiny vectors/norms
+
+
+def quantize_weight(w: jax.Array) -> Dict[str, jax.Array]:
+    """(..., K, N) -> {"q": int8 (..., K, N), "scale": f32 (..., N)}.
+
+    Per-output-channel scales; leading dims (stacked block weights)
+    quantize independently so the scan-over-groups structure survives.
+    """
+    wf = w.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(wf), axis=-2) / 127.0          # (..., N)
+    safe = jnp.where(scale > 0, scale, 1.0)
+    q = jnp.clip(jnp.round(wf / safe[..., None, :]), -127, 127
+                 ).astype(jnp.int8)
+    return {"q": q, "scale": scale.astype(jnp.float32)}
+
+
+def dequantize_weight(qw: Dict[str, jax.Array], dtype) -> jax.Array:
+    return (qw["q"].astype(jnp.float32)
+            * qw["scale"][..., None, :]).astype(dtype)
+
+
+def _is_quantizable(path: Tuple[str, ...], leaf) -> bool:
+    if not hasattr(leaf, "ndim") or leaf.ndim < 2:
+        return False
+    if leaf.size < _MIN_SIZE:
+        return False
+    if not jnp.issubdtype(leaf.dtype, jnp.floating):
+        return False
+    name = str(path[-1])
+    return name in _QUANT_KEYS or name in ("table", "gate", "up", "down")
+
+
+def quantize_params(params: Params) -> Tuple[Params, Dict[str, int]]:
+    """Quantize every large matmul weight in the tree.
+
+    Quantized leaves become {"q": int8, "scale": f32} sub-dicts; model
+    code transparently consumes them via `maybe_dequant` (layers.dense
+    and friends call it on every weight fetch).  Returns (params, stats).
+    """
+    stats = {"quantized": 0, "kept": 0, "bytes_before": 0, "bytes_after": 0}
+
+    def walk(path, node):
+        if isinstance(node, dict):
+            return {k: walk(path + (k,), v) for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            t = [walk(path + (str(i),), v) for i, v in enumerate(node)]
+            return type(node)(t) if not isinstance(node, tuple) else tuple(t)
+        if _is_quantizable(path, node):
+            stats["quantized"] += 1
+            stats["bytes_before"] += node.size * node.dtype.itemsize
+            qw = quantize_weight(node)
+            stats["bytes_after"] += qw["q"].size + qw["scale"].size * 4
+            return qw
+        stats["kept"] += 1
+        if hasattr(node, "size") and hasattr(node, "dtype"):
+            stats["bytes_before"] += node.size * node.dtype.itemsize
+            stats["bytes_after"] += node.size * node.dtype.itemsize
+        return node
+
+    return walk((), params), stats
+
+
+def maybe_dequant(w: Any, dtype) -> jax.Array:
+    """Weight fetch hook: dequantize {"q","scale"} leaves, pass others."""
+    if isinstance(w, dict) and "q" in w and "scale" in w:
+        return dequantize_weight(w, dtype)
+    return w.astype(dtype)

@@ -1,0 +1,187 @@
+"""Fault-tolerant distributed training loop.
+
+Features (large-scale runnability requirements):
+  * pjit train_step with GamaPlan-derived shardings (DP/TP/EP/SP);
+  * gradient accumulation (microbatching) inside one jit;
+  * checkpoint every N steps (async, atomic) + automatic restart: a step
+    failure restores the latest checkpoint and replays — exercised by the
+    fault-injection hook in tests;
+  * straggler mitigation: per-step wall-time EMA; a step slower than
+    ``straggler_factor`` x EMA is recorded and (on a real cluster) would
+    trigger hot-spare swap — here the detection + accounting layer is
+    implemented and unit-tested, the swap is a logged event;
+  * optional int8 gradient compression for the DP combine (manual-DP
+    shard_map path, see distributed/compression.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.models import loss_fn as model_loss_fn
+from repro.models.config import ModelConfig
+from repro.optim import adamw
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    steps: int = 100
+    ckpt_every: int = 50
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    ckpt_keep: int = 3
+    grad_accum: int = 1
+    straggler_factor: float = 3.0
+    straggler_ema: float = 0.9
+    max_restarts: int = 3
+    log_every: int = 10
+    remat: bool = True
+
+
+class StragglerMonitor:
+    """EMA-based step-time anomaly detector."""
+
+    def __init__(self, factor: float, ema: float):
+        self.factor = factor
+        self.ema_coef = ema
+        self.ema: Optional[float] = None
+        self.events = []
+
+    def observe(self, step: int, dt: float) -> bool:
+        is_straggler = (self.ema is not None
+                        and dt > self.factor * self.ema)
+        if is_straggler:
+            self.events.append({"step": step, "dt": dt, "ema": self.ema})
+        else:
+            # Stragglers do not poison the EMA.
+            self.ema = dt if self.ema is None else \
+                self.ema_coef * self.ema + (1 - self.ema_coef) * dt
+        return is_straggler
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: adamw.AdamWConfig,
+                    grad_accum: int = 1, remat: bool = True,
+                    remat_policy: str = "full") -> Callable:
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    With grad_accum > 1 the global batch is split along axis 0 into
+    microbatches inside the jit; gradients average in f32.
+    """
+
+    def loss(params, batch):
+        l, metrics = model_loss_fn(params, batch, cfg, remat=remat,
+                                   remat_policy=remat_policy)
+        return l, metrics
+
+    def train_step(params, opt_state, batch):
+        if grad_accum == 1:
+            (l, metrics), grads = jax.value_and_grad(
+                loss, has_aux=True)(params, batch)
+        else:
+            def micro(i, carry):
+                grads, lsum = carry
+                mb = jax.tree.map(
+                    lambda x: jax.lax.dynamic_slice_in_dim(
+                        x, i * (x.shape[0] // grad_accum),
+                        x.shape[0] // grad_accum, 0), batch)
+                (l, _), g = jax.value_and_grad(loss, has_aux=True)(
+                    params, mb)
+                grads = jax.tree.map(lambda a, b: a + b / grad_accum,
+                                     grads, g)
+                return grads, lsum + l / grad_accum
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            grads, l = jax.lax.fori_loop(0, grad_accum, micro,
+                                         (zeros, jnp.zeros((()))))
+            metrics = {"ce": l, "aux": jnp.zeros(())}
+        new_params, new_opt, opt_metrics = adamw.update(
+            opt_cfg, grads, opt_state, params)
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        metrics["loss"] = metrics.get("ce")
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+class Trainer:
+    """Loop with checkpoint/restart fault tolerance."""
+
+    def __init__(self, cfg: ModelConfig, tcfg: TrainConfig,
+                 opt_cfg: adamw.AdamWConfig, params, opt_state,
+                 data_iter_fn: Callable[[int], Iterator[Dict]],
+                 train_step: Callable,
+                 failure_hook: Optional[Callable[[int], None]] = None,
+                 shardings=None):
+        self.cfg, self.tcfg, self.opt_cfg = cfg, tcfg, opt_cfg
+        self.params, self.opt_state = params, opt_state
+        self.data_iter_fn = data_iter_fn
+        self.train_step = train_step
+        self.failure_hook = failure_hook
+        self.shardings = shardings
+        self.ckpt = CheckpointManager(tcfg.ckpt_dir, keep=tcfg.ckpt_keep)
+        self.straggler = StragglerMonitor(tcfg.straggler_factor,
+                                          tcfg.straggler_ema)
+        self.metrics_log = []
+        self.restarts = 0
+
+    def _state_tree(self):
+        return {"params": self.params, "opt": self.opt_state}
+
+    def _restore(self) -> int:
+        tree, step = self.ckpt.restore(self._state_tree(),
+                                       shardings=self.shardings)
+        self.params, self.opt_state = tree["params"], tree["opt"]
+        return step
+
+    def run(self, start_step: int = 0) -> Dict[str, Any]:
+        step = start_step
+        if self.ckpt.latest_step() is not None and start_step == 0:
+            step = self._restore()
+        data = self.data_iter_fn(step)
+        while step < self.tcfg.steps:
+            batch = next(data)
+            t0 = time.monotonic()
+            try:
+                if self.failure_hook is not None:
+                    self.failure_hook(step)   # test fault injection
+                self.params, self.opt_state, metrics = self.train_step(
+                    self.params, self.opt_state, batch)
+                loss = float(metrics["loss"])
+                if np.isnan(loss):
+                    raise FloatingPointError(f"NaN loss at step {step}")
+            except Exception as e:  # noqa: BLE001 — any step failure
+                self.restarts += 1
+                if self.restarts > self.tcfg.max_restarts:
+                    raise RuntimeError(
+                        f"exceeded max_restarts: {e}") from e
+                restored = self.ckpt.latest_step()
+                if restored is None:
+                    # No checkpoint yet: restart from the initial state.
+                    step = start_step
+                else:
+                    step = self._restore()
+                data = self.data_iter_fn(step)
+                continue
+            dt = time.monotonic() - t0
+            self.straggler.observe(step, dt)
+            if step % self.tcfg.log_every == 0:
+                self.metrics_log.append(
+                    {"step": step, "loss": loss, "dt": dt,
+                     "grad_norm": float(metrics["grad_norm"])})
+            step += 1
+            if step % self.tcfg.ckpt_every == 0:
+                self.ckpt.save(step, self._state_tree())
+        self.ckpt.save(step, self._state_tree(), blocking=True)
+        return {
+            "final_step": step,
+            "restarts": self.restarts,
+            "straggler_events": self.straggler.events,
+            "metrics": self.metrics_log,
+        }

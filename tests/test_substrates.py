@@ -1,0 +1,263 @@
+"""Substrate tests: data determinism, optimizer, checkpoint/restore,
+fault-tolerant trainer, straggler detection, serving engine."""
+
+import os
+import shutil
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.data.pipeline import DataConfig, SyntheticLM, host_shard
+from repro.models import ModelConfig, init_params
+from repro.optim import adamw
+from repro.serving.engine import ServeConfig, ServeEngine
+from repro.training.trainer import (StragglerMonitor, TrainConfig, Trainer,
+                                    make_train_step)
+
+TINY = ModelConfig(name="tiny", n_layers=2, d_model=64, n_heads=4,
+                   n_kv_heads=2, d_head=16, d_ff=128, vocab_size=128,
+                   compute_dtype="float32", cache_dtype="float32")
+
+
+# ---------------------------------------------------------------------------
+# Data pipeline
+# ---------------------------------------------------------------------------
+
+
+class TestData:
+    def test_deterministic_restart(self):
+        data = SyntheticLM(DataConfig(vocab_size=100, seq_len=16,
+                                      global_batch=4, seed=3))
+        a = data.batch_at(11)
+        b = data.batch_at(11)
+        np.testing.assert_array_equal(a["tokens"], b["tokens"])
+        it = data.iterate(start_step=11)
+        c = next(it)
+        np.testing.assert_array_equal(a["tokens"], c["tokens"])
+
+    def test_labels_are_shifted_tokens(self):
+        data = SyntheticLM(DataConfig(vocab_size=100, seq_len=16,
+                                      global_batch=4))
+        b = data.batch_at(0)
+        assert b["tokens"].shape == b["labels"].shape == (4, 16)
+        assert b["tokens"].min() >= 0 and b["tokens"].max() < 100
+
+    def test_host_shard_partition(self):
+        data = SyntheticLM(DataConfig(vocab_size=100, seq_len=8,
+                                      global_batch=8))
+        b = data.batch_at(0)
+        parts = [host_shard(b, i, 4)["tokens"] for i in range(4)]
+        np.testing.assert_array_equal(np.concatenate(parts), b["tokens"])
+
+
+# ---------------------------------------------------------------------------
+# Optimizer
+# ---------------------------------------------------------------------------
+
+
+class TestAdamW:
+    def test_descends_quadratic(self):
+        cfg = adamw.AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=1,
+                                total_steps=100)
+        params = {"w": jnp.array([5.0, -3.0])}
+        state = adamw.init(params)
+        for _ in range(60):
+            grads = {"w": 2 * params["w"]}
+            params, state, m = adamw.update(cfg, grads, state, params)
+        assert float(jnp.abs(params["w"]).max()) < 1.0
+
+    def test_clipping(self):
+        cfg = adamw.AdamWConfig(clip_norm=1.0)
+        params = {"w": jnp.zeros(4)}
+        state = adamw.init(params)
+        _, _, m = adamw.update(cfg, {"w": jnp.full(4, 100.0)}, state, params)
+        assert float(m["grad_norm"]) == pytest.approx(200.0)
+
+    def test_schedule_warmup_and_decay(self):
+        cfg = adamw.AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                                min_lr_ratio=0.1)
+        assert float(adamw.schedule(cfg, jnp.array(0))) < 0.2
+        assert float(adamw.schedule(cfg, jnp.array(10))) == pytest.approx(
+            1.0, abs=0.1)
+        assert float(adamw.schedule(cfg, jnp.array(100))) == pytest.approx(
+            0.1, abs=0.01)
+
+
+# ---------------------------------------------------------------------------
+# Checkpointing
+# ---------------------------------------------------------------------------
+
+
+class TestCheckpoint:
+    def test_roundtrip_and_gc(self):
+        tmp = tempfile.mkdtemp()
+        try:
+            mgr = CheckpointManager(tmp, keep=2)
+            tree = {"params": {"w": jnp.arange(6.0).reshape(2, 3)},
+                    "opt": adamw.init({"w": jnp.zeros((2, 3))})}
+            for step in (10, 20, 30):
+                mgr.save(step, tree, blocking=True)
+            assert mgr.all_steps() == [20, 30]   # keep=2 gc'd step 10
+            restored, step = mgr.restore(jax.tree.map(jnp.zeros_like, tree))
+            assert step == 30
+            np.testing.assert_array_equal(
+                np.asarray(restored["params"]["w"]),
+                np.asarray(tree["params"]["w"]))
+            # NamedTuple (OptState) structure survived.
+            assert restored["opt"].step.shape == ()
+        finally:
+            shutil.rmtree(tmp)
+
+    def test_atomic_no_tmp_left(self):
+        tmp = tempfile.mkdtemp()
+        try:
+            mgr = CheckpointManager(tmp)
+            mgr.save(1, {"x": jnp.ones(3)}, blocking=True)
+            assert not any(n.endswith(".tmp") for n in os.listdir(tmp))
+        finally:
+            shutil.rmtree(tmp)
+
+    def test_shape_mismatch_rejected(self):
+        tmp = tempfile.mkdtemp()
+        try:
+            mgr = CheckpointManager(tmp)
+            mgr.save(1, {"x": jnp.ones((2, 2))}, blocking=True)
+            with pytest.raises(AssertionError):
+                mgr.restore({"x": jnp.ones((3, 3))})
+        finally:
+            shutil.rmtree(tmp)
+
+
+# ---------------------------------------------------------------------------
+# Trainer: fault tolerance + straggler detection
+# ---------------------------------------------------------------------------
+
+
+def _mk_trainer(tmp, failure_hook=None, steps=30):
+    params = init_params(jax.random.PRNGKey(0), TINY)
+    opt_cfg = adamw.AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=steps)
+    data = SyntheticLM(DataConfig(vocab_size=TINY.vocab_size, seq_len=16,
+                                  global_batch=4))
+    step_fn = jax.jit(make_train_step(TINY, opt_cfg, remat=False))
+    return Trainer(TINY, TrainConfig(steps=steps, ckpt_every=10,
+                                     ckpt_dir=tmp, log_every=5),
+                   opt_cfg, params, adamw.init(params),
+                   lambda s: data.iterate(s), step_fn,
+                   failure_hook=failure_hook)
+
+
+class TestTrainer:
+    def test_loss_decreases(self):
+        tmp = tempfile.mkdtemp()
+        try:
+            res = _mk_trainer(tmp).run()
+            losses = [m["loss"] for m in res["metrics"]]
+            assert losses[-1] < losses[0]
+            assert res["restarts"] == 0
+        finally:
+            shutil.rmtree(tmp)
+
+    def test_restart_on_failure(self):
+        tmp = tempfile.mkdtemp()
+        fail = {12}
+
+        def hook(step):
+            if step in fail:
+                fail.clear()
+                raise RuntimeError("injected node failure")
+        try:
+            res = _mk_trainer(tmp, failure_hook=hook).run()
+            assert res["restarts"] == 1
+            assert res["final_step"] == 30
+        finally:
+            shutil.rmtree(tmp)
+
+    def test_too_many_failures_raises(self):
+        tmp = tempfile.mkdtemp()
+
+        def hook(step):
+            raise RuntimeError("persistent failure")
+        try:
+            with pytest.raises(RuntimeError):
+                _mk_trainer(tmp, failure_hook=hook).run()
+        finally:
+            shutil.rmtree(tmp)
+
+
+class TestStraggler:
+    def test_detects_slow_step(self):
+        mon = StragglerMonitor(factor=3.0, ema=0.5)
+        for i in range(10):
+            assert not mon.observe(i, 0.1)
+        assert mon.observe(10, 1.0)       # 10x EMA
+        assert len(mon.events) == 1
+        # EMA unpoisoned: next normal step is not flagged.
+        assert not mon.observe(11, 0.1)
+
+
+# ---------------------------------------------------------------------------
+# Serving engine
+# ---------------------------------------------------------------------------
+
+
+class TestServing:
+    def test_greedy_generation_consistent(self):
+        params = init_params(jax.random.PRNGKey(0), TINY)
+        eng = ServeEngine(TINY, params, ServeConfig(batch_slots=2,
+                                                    max_len=64))
+        prompts = np.random.default_rng(0).integers(
+            0, TINY.vocab_size, size=(2, 8)).astype(np.int32)
+        out1 = eng.generate(prompts, max_new=6)
+        out2 = eng.generate(prompts, max_new=6)
+        np.testing.assert_array_equal(out1, out2)   # greedy = deterministic
+        assert out1.shape == (2, 6)
+        assert out1.min() >= 0 and out1.max() < TINY.vocab_size
+
+
+class TestMixedPrecision:
+    def test_bf16_master_weights_descend(self):
+        """bf16 live params + f32 master copy (AdamW master_weights):
+        training descends and params stay bf16."""
+        import jax.numpy as jnp
+        from repro.models import ModelConfig, init_params
+        cfg = ModelConfig(name="mp", n_layers=2, d_model=64, n_heads=4,
+                          n_kv_heads=2, d_head=16, d_ff=128, vocab_size=128,
+                          param_dtype="bfloat16", compute_dtype="float32",
+                          cache_dtype="float32")
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        ocfg = adamw.AdamWConfig(lr=2e-3, warmup_steps=2, total_steps=40,
+                                 master_weights=True)
+        opt = adamw.init(params, master_weights=True)
+        data = SyntheticLM(DataConfig(vocab_size=128, seq_len=32,
+                                      global_batch=8))
+        step = jax.jit(make_train_step(cfg, ocfg, remat=False))
+        losses = []
+        for t in range(30):
+            batch = {k: jnp.asarray(v) for k, v in data.batch_at(t).items()}
+            params, opt, m = step(params, opt, batch)
+            losses.append(float(m["loss"]))
+        assert losses[-1] < losses[0]
+        assert all(x.dtype == jnp.bfloat16
+                   for x in jax.tree.leaves(params))
+        # master stays f32 inside the optimizer state.
+        assert all(x.dtype == jnp.float32
+                   for x in jax.tree.leaves(opt.master))
+
+    def test_checkpoint_with_master(self):
+        import tempfile, shutil
+        import jax.numpy as jnp
+        tmp = tempfile.mkdtemp()
+        try:
+            params = {"w": jnp.ones((2, 2), jnp.bfloat16)}
+            opt = adamw.init(params, master_weights=True)
+            mgr = CheckpointManager(tmp)
+            mgr.save(1, {"params": params, "opt": opt}, blocking=True)
+            restored, step = mgr.restore({"params": params, "opt": opt})
+            assert step == 1
+            assert restored["opt"].master["w"].dtype == jnp.float32
+        finally:
+            shutil.rmtree(tmp)
