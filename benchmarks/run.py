@@ -6,13 +6,19 @@ side-by-side with the paper's); the TPU benches exercise the GAMA planner
 and the Pallas kernels (interpret mode) on this host.
 
 Run: PYTHONPATH=src python -m benchmarks.run [--filter substr]
+                                             [--json BENCH_out.json]
+
+``--json`` additionally writes the rows as machine-readable JSON
+(``{"schema": 1, "rows": [{name, us_per_call, derived}, ...]}``) so the
+perf trajectory can be tracked across commits.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import time
-from typing import Callable, List, Tuple
+from typing import Callable, Dict, List, Tuple
 
 import numpy as np
 
@@ -26,13 +32,13 @@ def timed(fn: Callable, reps: int = 3) -> Tuple[float, object]:
     return us, out
 
 
-ROWS: List[str] = []
+ROWS: List[Dict[str, object]] = []
 
 
 def emit(name: str, us: float, derived: str) -> None:
-    row = f"{name},{us:.1f},{derived}"
-    ROWS.append(row)
-    print(row)
+    ROWS.append({"name": name, "us_per_call": round(us, 1),
+                 "derived": derived})
+    print(f"{name},{us:.1f},{derived}")
 
 
 # ---------------------------------------------------------------------------
@@ -188,6 +194,22 @@ def bench_roofline_summary() -> None:
          f"cells={len(recs)} dominant_counts={doms}")
 
 
+def bench_tuning_dispatch() -> None:
+    """Hot-path cost of the autotuner's dispatch (must be ~dict lookup)."""
+    import jax.numpy as jnp
+    from repro.tuning import dispatch
+
+    dispatch.reset()
+    us_cold, cfg = timed(
+        lambda: dispatch.gemm_config(4096, 4096, 4096, jnp.bfloat16), reps=1)
+    us_hot, _ = timed(
+        lambda: dispatch.gemm_config(4096, 4096, 4096, jnp.bfloat16),
+        reps=100)
+    emit("tuning.dispatch.gemm", us_hot,
+         f"cold={us_cold:.0f}us hot={us_hot:.2f}us source={cfg.source} "
+         f"tile=({cfg.tm}x{cfg.tk}x{cfg.tn},{cfg.order})")
+
+
 BENCHES = [
     ("table2", bench_table2),
     ("table3", bench_table3),
@@ -198,6 +220,7 @@ BENCHES = [
     ("fig7", bench_fig7),
     ("tpu_planner", bench_tpu_planner),
     ("kernels", bench_kernels),
+    ("tuning", bench_tuning_dispatch),
     ("roofline", bench_roofline_summary),
 ]
 
@@ -205,12 +228,18 @@ BENCHES = [
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--filter", type=str, default="")
+    ap.add_argument("--json", type=str, default=None, metavar="PATH",
+                    help="also write rows as JSON (e.g. BENCH_tpu.json)")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     for name, fn in BENCHES:
         if args.filter and args.filter not in name:
             continue
         fn()
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"schema": 1, "rows": ROWS}, f, indent=1)
+        print(f"# wrote {len(ROWS)} rows to {args.json}")
 
 
 if __name__ == "__main__":

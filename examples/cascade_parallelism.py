@@ -27,8 +27,7 @@ from repro.distributed.cascade import (cascade_ffn,  # noqa: E402
 
 
 def main() -> None:
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat_make_mesh((2, 4), ("data", "model"))
     rng = np.random.default_rng(0)
     t, d, f = 32, 64, 256
     x = jnp.asarray(rng.normal(size=(t, d)), jnp.float32)

@@ -47,6 +47,10 @@ class Buffer:
     phase: str         # "ping" | "pong"
     size: int
     start_addr: Optional[int] = None
+    # Bank chosen by Algorithm 1's phase 1.  The paper's rules (a)-(c)
+    # constrain this assignment; the phase-2 overflow shift (lines 27-29)
+    # may move the buffer's *address* into a later bank.
+    assigned_bank: Optional[int] = None
 
     @property
     def end_addr(self) -> int:
@@ -71,8 +75,15 @@ class Placement:
         return {b.name: b for b in self.buffers}
 
     def home_bank(self, buf: Buffer) -> int:
-        """The bank a buffer was assigned to (its start address's bank)."""
+        """The bank a buffer's start address lies in (post overflow shift)."""
         return buf.start_addr // self.dev.bank_bytes
+
+    def bank_of(self, buf: Buffer, assigned: bool = False) -> int:
+        """Home bank, or the phase-1 *assigned* bank when requested (falls
+        back to the address bank for placements without assignment)."""
+        if assigned and buf.assigned_bank is not None:
+            return buf.assigned_bank
+        return self.home_bank(buf)
 
     def validate(self) -> None:
         """No overlap, all within memory."""
@@ -169,6 +180,7 @@ def place_buffers(shape: GemmShape, p: hw.Precision,
                     continue
             occupants[bank].append(buf)
             free_spots[bank] -= 1
+            buf.assigned_bank = bank
             placed = True
             break
         if not placed:
@@ -240,10 +252,17 @@ def place_buffers_unconstrained(shape: GemmShape, p: hw.Precision,
 # ---------------------------------------------------------------------------
 
 
-def check_rules(pl: Placement) -> Dict[str, bool]:
-    """Evaluate the paper's rules (a)-(c) on a placement (home banks)."""
+def check_rules(pl: Placement, assigned: bool = False) -> Dict[str, bool]:
+    """Evaluate the paper's rules (a)-(c) on a placement.
+
+    By default rules are judged on *home* banks (start addresses, i.e.
+    after the phase-2 overflow shift).  ``assigned=True`` judges the
+    phase-1 bank assignment instead — the thing the paper's rules
+    actually constrain; Algorithm 1 satisfies all three there by
+    construction.
+    """
     by = pl.by_name()
-    hb = {n: pl.home_bank(b) for n, b in by.items()}
+    hb = {n: pl.bank_of(b, assigned) for n, b in by.items()}
     rule_a = all(hb[f"ping_{m}"] != hb[f"pong_{m}"] for m in "ABC")
     rule_b = all(abs(hb[f"ping_{m}"] - hb[f"pong_{m}"]) > 1 for m in "AB")
     rule_c = all(hb[f"{ph}_A"] != hb[f"{ph2}_B"]

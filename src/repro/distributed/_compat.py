@@ -1,0 +1,23 @@
+"""shard_map compatibility across jax versions.
+
+Newer jax exposes ``jax.shard_map`` with a ``check_vma`` kwarg; older
+releases keep it in ``jax.experimental.shard_map`` and call the same
+knob ``check_rep``.  ``shard_map`` here accepts the new spelling and
+translates as needed.
+"""
+
+from __future__ import annotations
+
+try:
+    from jax import shard_map as _shard_map
+except ImportError:  # pre-0.6 jax
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=False):
+    try:
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_vma=check_vma)
+    except TypeError:
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=check_vma)

@@ -24,7 +24,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
+from repro.distributed._compat import shard_map
 
 
 def cascade_groups(w: int, g: int):

@@ -25,7 +25,7 @@ from typing import Any, Tuple
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
+from repro.distributed._compat import shard_map
 
 BLOCK = 256
 

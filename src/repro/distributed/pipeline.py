@@ -19,7 +19,7 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
+from repro.distributed._compat import shard_map
 
 Params = Any
 

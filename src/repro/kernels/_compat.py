@@ -1,0 +1,10 @@
+"""Pallas API compatibility across jax versions.
+
+jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams``;
+resolve whichever this installation provides so the kernels run on both.
+"""
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams")

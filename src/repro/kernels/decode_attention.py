@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import _compat
+
 _LANES = 128
 _NEG_INF = -1e30
 
@@ -122,7 +124,7 @@ def flash_decode(
             pltpu.VMEM((group, _LANES), jnp.float32),
             pltpu.VMEM((group, d), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_compat.CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
         name="gama_flash_decode",

@@ -22,8 +22,31 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import _compat
+
 _LANES = 128
 _NEG_INF = -1e30
+
+# Block-size defaults; the autotuner (repro.tuning) searches around these
+# and ops.attention consults its cache before falling back here.
+DEFAULT_BQ = 128
+DEFAULT_BK = 128
+
+
+def attention_vmem_bytes(bq: int, bk: int, d: int, in_bytes: int) -> int:
+    """VMEM working set of one grid step, used by the tuner's analytic
+    pruner to reject over-budget (bq, bk) blocks before measuring.
+
+    Inputs (q, k, v blocks) are double-buffered by the Pallas pipeline;
+    the f32 running-softmax state (m, l lane-replicated + output
+    accumulator) persists across the KV loop; the output block is
+    written once.
+    """
+    q = bq * d * in_bytes
+    kv = 2 * bk * d * in_bytes
+    state = bq * _LANES * 4 * 2 + bq * d * 4
+    out = bq * d * in_bytes
+    return 2 * (q + kv) + state + out
 
 
 def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
@@ -90,8 +113,8 @@ def flash_attention(
     k: jax.Array,
     v: jax.Array,
     *,
-    bq: int = 128,
-    bk: int = 128,
+    bq: int = DEFAULT_BQ,
+    bk: int = DEFAULT_BK,
     scale: Optional[float] = None,
     causal: bool = True,
     q_offset: int = 0,
@@ -137,7 +160,7 @@ def flash_attention(
             pltpu.VMEM((bq, _LANES), jnp.float32),   # running denominator
             pltpu.VMEM((bq, d), jnp.float32),        # output accumulator
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_compat.CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,

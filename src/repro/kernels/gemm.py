@@ -29,6 +29,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import _compat
+
 # Integer output ranges for the saturating epilogue.
 _INT_RANGE = {
     jnp.int8.dtype: (-128, 127),
@@ -69,16 +71,24 @@ def gama_gemm(
     tn: int,
     out_dtype=None,
     scale: float = 1.0,
+    order: str = "mn",
     interpret: bool = False,
 ) -> jax.Array:
     """C[M,N] = A[M,K] @ B[K,N] with GAMA tiling.  Shapes must be tile-
     aligned (ops.py pads); int8 inputs accumulate in int32, floats in f32.
+
+    ``order`` picks the grid traversal: "mn" walks M outermost (B tile
+    columns are re-streamed per M row — the seed behavior), "nm" walks N
+    outermost (A tile rows re-streamed).  K stays innermost either way;
+    the choice only changes which operand enjoys pipeline-level reuse, a
+    tunable the autotuner (repro.tuning) measures per shape.
     """
     m, k = a.shape
     k2, n = b.shape
     assert k == k2, (a.shape, b.shape)
     assert m % tm == 0 and k % tk == 0 and n % tn == 0, (
         f"({m},{k},{n}) not aligned to ({tm},{tk},{tn})")
+    assert order in ("mn", "nm"), order
 
     integer = jnp.issubdtype(a.dtype, jnp.integer)
     acc_dtype = jnp.int32 if integer else jnp.float32
@@ -87,7 +97,16 @@ def gama_gemm(
     out_dtype = jnp.dtype(out_dtype)
 
     k_steps = k // tk
-    grid = (m // tm, n // tn, k_steps)
+    if order == "mn":
+        grid = (m // tm, n // tn, k_steps)
+        a_map = lambda i, j, kk: (i, kk)
+        b_map = lambda i, j, kk: (kk, j)
+        o_map = lambda i, j, kk: (i, j)
+    else:
+        grid = (n // tn, m // tm, k_steps)
+        a_map = lambda j, i, kk: (i, kk)
+        b_map = lambda j, i, kk: (kk, j)
+        o_map = lambda j, i, kk: (i, j)
 
     kernel = functools.partial(_gemm_kernel, k_steps=k_steps,
                                out_dtype=out_dtype, scale=scale)
@@ -95,13 +114,13 @@ def gama_gemm(
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((tm, tk), lambda i, j, kk: (i, kk)),
-            pl.BlockSpec((tk, tn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((tm, tk), a_map),
+            pl.BlockSpec((tk, tn), b_map),
         ],
-        out_specs=pl.BlockSpec((tm, tn), lambda i, j, kk: (i, j)),
+        out_specs=pl.BlockSpec((tm, tn), o_map),
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
         scratch_shapes=[pltpu.VMEM((tm, tn), acc_dtype)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_compat.CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
         name="gama_gemm",

@@ -18,8 +18,6 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import hw
-from repro.core.tile_search import search_tpu_tiles
 from repro.kernels import ref
 from repro.kernels.decode_attention import flash_decode
 from repro.kernels.flash_attention import flash_attention
@@ -49,41 +47,49 @@ def _round_up(x: int, mult: int) -> int:
     return -(-x // mult) * mult
 
 
-def _pick_tiles(m: int, k: int, n: int, dtype) -> tuple[int, int, int]:
-    """Planner-driven tiles, shrunk for small problems."""
-    p = hw.BF16_BF16 if not jnp.issubdtype(dtype, jnp.integer) else hw.INT8_INT8
-    cands = [c for c in (128, 256, 512, 1024) if c <= max(m, 128)]
-    kcands = [c for c in (128, 256, 512, 1024, 2048) if c <= max(k, 128)]
-    ncands = sorted(set(c for c in (128, 256, 512, 1024) if c <= max(n, 128)))
-    plan = search_tpu_tiles(m, k, n, p, candidates=tuple(sorted(set(cands + ncands))),
-                            k_candidates=tuple(kcands))
-    return plan.tm, plan.tk, plan.tn
+def _pick_tiles(m: int, k: int, n: int, dtype) -> tuple[int, int, int, str]:
+    """Tuned-or-analytic tiles: the tuning cache's best when one exists
+    for this (shape, dtype, backend), else the analytic planner's answer
+    (identical to the historical search — see repro.tuning.prior)."""
+    from repro.tuning import dispatch
+    cfg = dispatch.gemm_config(m, k, n, dtype)
+    return cfg.tm, cfg.tk, cfg.tn, cfg.order
 
 
 def matmul(a: jax.Array, b: jax.Array, *, out_dtype=None, scale: float = 1.0,
            tiles: Optional[tuple[int, int, int]] = None,
+           order: Optional[str] = None,
            mode: Mode = "auto") -> jax.Array:
     """GAMA GEMM with padding + planning.  a: (M, K); b: (K, N)."""
     if not _use_kernel(mode):
         return ref.ref_gemm(a, b, out_dtype=out_dtype, scale=scale)
     m, k = a.shape
     _, n = b.shape
-    tm, tk, tn = tiles or _pick_tiles(m, k, n, a.dtype)
+    if tiles is None:
+        tm, tk, tn, plan_order = _pick_tiles(m, k, n, a.dtype)
+    else:
+        (tm, tk, tn), plan_order = tiles, "mn"
+    order = order or plan_order
     tm, tk, tn = min(tm, _round_up(m, 8)), min(tk, _round_up(k, 128)), \
         min(tn, _round_up(n, 128))
     mp, kp, np_ = _round_up(m, tm), _round_up(k, tk), _round_up(n, tn)
     ap = jnp.pad(a, ((0, mp - m), (0, kp - k)))
     bp = jnp.pad(b, ((0, kp - k), (0, np_ - n)))
     out = gama_gemm(ap, bp, tm=tm, tk=tk, tn=tn, out_dtype=out_dtype,
-                    scale=scale, interpret=_interpret())
+                    scale=scale, order=order, interpret=_interpret())
     return out[:m, :n]
 
 
 def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
               causal: bool = True, scale: Optional[float] = None,
-              q_offset: int = 0, bq: int = 128, bk: int = 128,
+              q_offset: int = 0, bq: Optional[int] = None,
+              bk: Optional[int] = None,
               mode: Mode = "auto") -> jax.Array:
-    """Flash attention with seq padding.  q: (B,Hq,Sq,D); kv: (B,Hkv,Sk,D)."""
+    """Flash attention with seq padding.  q: (B,Hq,Sq,D); kv: (B,Hkv,Sk,D).
+
+    ``bq``/``bk`` default to the tuning cache's best blocks for this
+    (Sq, Sk, D) shape, falling back to the 128/128 analytic default.
+    """
     if not _use_kernel(mode):
         # Long sequences lower the chunked (flash-algorithm) form so the
         # dry-run's memory analysis reflects the deployed kernel.
@@ -94,6 +100,11 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                                  q_offset=q_offset)
     b, hq, sq, d = q.shape
     _, hkv, sk, _ = k.shape
+    if bq is None or bk is None:
+        from repro.tuning import dispatch
+        tuned_bq, tuned_bk = dispatch.attention_blocks(sq, sk, d, q.dtype)
+        bq = bq if bq is not None else tuned_bq
+        bk = bk if bk is not None else tuned_bk
     bq = min(bq, _round_up(sq, 8))
     bk = min(bk, _round_up(sk, 128))
     sqp, skp = _round_up(sq, bq), _round_up(sk, bk)

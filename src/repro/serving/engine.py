@@ -26,6 +26,24 @@ class ServeConfig:
     enc_len: int = 0          # encoder length for enc-dec models
     temperature: float = 0.0  # 0 = greedy
     quantize: bool = False    # int8 weight-only (paper multi-precision)
+    pretune: bool = True      # resolve tuned kernel configs at init
+
+
+def model_gemm_shapes(cfg: ModelConfig, batch: int, seq: int
+                      ) -> List[tuple]:
+    """The (M, K, N) GEMM shapes a forward pass issues, for cache
+    pre-warming: prefill sees M = batch*seq tokens, decode M = batch."""
+    shapes = []
+    qkv_n = (cfg.n_heads + 2 * cfg.n_kv_heads) * cfg.d_head
+    for m in (batch * seq, batch):
+        shapes += [
+            (m, cfg.d_model, qkv_n),                     # fused qkv proj
+            (m, cfg.n_heads * cfg.d_head, cfg.d_model),  # out proj
+            (m, cfg.d_model, cfg.d_ff),                  # ffn up/gate
+            (m, cfg.d_ff, cfg.d_model),                  # ffn down
+            (m, cfg.d_model, cfg.vocab_size),            # lm head
+        ]
+    return shapes
 
 
 class ServeEngine:
@@ -36,6 +54,18 @@ class ServeEngine:
         else:
             self.quant_stats = None
         self.cfg, self.params, self.scfg = cfg, params, scfg
+        self.tuned_gemm_hits = 0
+        if scfg.pretune:
+            # Resolve every GEMM shape's kernel config up front (cache
+            # hit or analytic fallback) so jit tracing — the hot path —
+            # only ever sees memoized lookups, never disk or search.
+            # GEMMs dispatch on the activation dtype: layers cast to
+            # cfg.cdtype, and quantized weights are dequantized to it
+            # before the matmul.
+            from repro.tuning import dispatch
+            self.tuned_gemm_hits = dispatch.warm_gemm_shapes(
+                model_gemm_shapes(cfg, scfg.batch_slots, scfg.max_len),
+                cfg.cdtype)
         self._prefill = jax.jit(
             lambda p, b, c: prefill(p, b, cfg, c))
         self._decode = jax.jit(

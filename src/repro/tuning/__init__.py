@@ -1,0 +1,38 @@
+"""repro.tuning — empirical kernel autotuner with analytic pruning.
+
+GAMA's performance comes from *searching* a constrained design space
+(tile sizes via the Eq. 6 memory constraint, pack size G via the KCE
+sweep) rather than trusting defaults.  This package turns that static,
+analytic search into an empirical, cached autotuner:
+
+* :mod:`repro.tuning.space` — enumerates the legal Pallas kernel
+  configurations (the design space);
+* :mod:`repro.tuning.prior` — ranks candidates with the paper's
+  analytic cost model (:mod:`repro.core.gemm_model` /
+  :mod:`repro.core.tile_search`) so only the most promising survive
+  to measurement — the Eq. 6 search becomes the *prior*, not the
+  answer;
+* :mod:`repro.tuning.runner` — times surviving candidates on the real
+  backend (interpret mode on CPU, compiled on TPU) with warm-up and
+  outlier rejection, checking numerics against :mod:`repro.kernels.ref`;
+* :mod:`repro.tuning.cache` — persistent, schema-versioned JSON cache
+  keyed by ``(op, M, N, K, dtype, backend, device_kind)``;
+* :mod:`repro.tuning.dispatch` — the hot path: in-process memo over the
+  cache with an analytic fallback, consulted by
+  :func:`repro.kernels.ops.matmul` / ``attention`` and pre-warmed by the
+  serving engine.  Zero search per call — two dict lookups;
+* :mod:`repro.tuning.cli` — ``python -m repro.tuning.cli {tune,show,clear}``.
+"""
+
+from repro.tuning.cache import (SCHEMA_VERSION, TuningCache, cache_key,
+                                default_cache_path)
+from repro.tuning.dispatch import (attention_blocks, gemm_config, gemm_tiles,
+                                   reset, set_cache_path, warm_gemm_shapes)
+from repro.tuning.space import AttentionCandidate, DesignSpace, GemmCandidate
+
+__all__ = [
+    "SCHEMA_VERSION", "TuningCache", "cache_key", "default_cache_path",
+    "attention_blocks", "gemm_config", "gemm_tiles", "reset",
+    "set_cache_path", "warm_gemm_shapes",
+    "AttentionCandidate", "DesignSpace", "GemmCandidate",
+]

@@ -1,0 +1,112 @@
+"""Persistent tuning cache — schema-versioned JSON, atomic writes.
+
+One file holds every tuned entry for a machine.  Entries are keyed by
+``(op, M, N, K, dtype, backend, device_kind)`` — the same problem on a
+different backend (CPU interpret vs. compiled TPU) or a different device
+generation tunes independently, mirroring how the paper's Eq. 6 search
+must be re-run per hardware target.
+
+The file layout is ``{"schema": N, "entries": {key: entry}}``.  A schema
+mismatch (or an unreadable file) invalidates the whole cache rather than
+risking stale configs driving the kernels.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from pathlib import Path
+from typing import Any, Dict, Optional
+
+SCHEMA_VERSION = 1
+
+_ENV_VAR = "REPRO_TUNING_CACHE"
+
+
+def default_cache_path() -> Path:
+    """Cache location: $REPRO_TUNING_CACHE, else
+    ~/.cache/repro/tuning_cache.json."""
+    env = os.environ.get(_ENV_VAR)
+    if env:
+        return Path(env).expanduser()
+    return Path("~/.cache/repro/tuning_cache.json").expanduser()
+
+
+def cache_key(op: str, m: int, n: int, k: int, dtype: str, backend: str,
+              device_kind: str, extra: str = "") -> str:
+    """Canonical key.  ``extra`` carries op-specific context (e.g. mesh
+    shape for sharded GEMM) without widening the common schema."""
+    key = f"{op}|m{m}|n{n}|k{k}|{dtype}|{backend}|{device_kind}"
+    return f"{key}|{extra}" if extra else key
+
+
+class TuningCache:
+    """Load-once, save-atomically JSON cache of tuned kernel configs."""
+
+    def __init__(self, path: Optional[Path] = None):
+        self.path = Path(path) if path is not None else default_cache_path()
+        self.entries: Dict[str, Dict[str, Any]] = {}
+        self._loaded = False
+
+    # -- persistence --------------------------------------------------------
+
+    def load(self) -> "TuningCache":
+        self._loaded = True
+        self.entries = {}
+        try:
+            raw = json.loads(self.path.read_text())
+        except (OSError, ValueError):
+            return self
+        if not isinstance(raw, dict) or raw.get("schema") != SCHEMA_VERSION:
+            # Version mismatch: discard rather than misinterpret.
+            return self
+        entries = raw.get("entries")
+        if isinstance(entries, dict):
+            self.entries = entries
+        return self
+
+    def save(self) -> None:
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+        payload = {"schema": SCHEMA_VERSION, "entries": self.entries}
+        fd, tmp = tempfile.mkstemp(dir=str(self.path.parent),
+                                   prefix=self.path.name, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(payload, f, indent=1, sort_keys=True)
+            os.replace(tmp, self.path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+
+    # -- access -------------------------------------------------------------
+
+    def _ensure_loaded(self) -> None:
+        if not self._loaded:
+            self.load()
+
+    def get(self, key: str) -> Optional[Dict[str, Any]]:
+        self._ensure_loaded()
+        return self.entries.get(key)
+
+    def put(self, key: str, entry: Dict[str, Any]) -> None:
+        self._ensure_loaded()
+        self.entries[key] = entry
+
+    def clear(self) -> int:
+        """Drop all entries and delete the backing file.  Returns count."""
+        self._ensure_loaded()
+        n = len(self.entries)
+        self.entries = {}
+        try:
+            self.path.unlink()
+        except OSError:
+            pass
+        return n
+
+    def __len__(self) -> int:
+        self._ensure_loaded()
+        return len(self.entries)

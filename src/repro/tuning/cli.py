@@ -1,0 +1,154 @@
+"""Autotuner CLI — ``python -m repro.tuning.cli {tune,show,clear}``.
+
+Examples::
+
+    # Tune one GEMM shape (M,N,K) on this host; second run is a cache hit.
+    python -m repro.tuning.cli tune --op gemm --shape 512,512,512 --dtype bf16
+
+    # Tune flash-attention blocks for (Sq, Sk, D).
+    python -m repro.tuning.cli tune --op attention --shape 512,512,64
+
+    # Pack-analogue G for a sharded GEMM on a 16x16 mesh.
+    python -m repro.tuning.cli tune --op sharded_gemm \\
+        --shape 65536,16384,7168 --dtype bf16 --mesh 16,16
+
+    # Inspect / wipe the persistent cache.
+    python -m repro.tuning.cli show
+    python -m repro.tuning.cli clear
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import List, Optional
+
+from repro.tuning import dispatch
+from repro.tuning.cache import TuningCache, default_cache_path
+
+
+def _parse_shape(text: str, n: int = 3) -> List[int]:
+    parts = [p for p in text.replace("x", ",").split(",") if p]
+    if len(parts) != n:
+        raise SystemExit(f"--shape wants {n} comma-separated ints, "
+                         f"got {text!r}")
+    return [int(p) for p in parts]
+
+
+def _cache_from(args) -> TuningCache:
+    if args.cache:
+        dispatch.set_cache_path(args.cache)
+    return dispatch.get_cache()
+
+
+def cmd_tune(args) -> int:
+    import jax.numpy as jnp
+    try:
+        jnp.dtype(dispatch.canonical_dtype(args.dtype))
+    except TypeError:
+        raise SystemExit(f"unknown --dtype {args.dtype!r} "
+                         "(try bf16, f32, f16, int8)")
+    tc = _cache_from(args)
+    if args.op == "gemm":
+        m, n, k = _parse_shape(args.shape)
+        res = dispatch.tune_gemm(m, k, n, args.dtype, keep=args.keep,
+                                 warmup=args.warmup, reps=args.reps,
+                                 force=args.force, cache=tc)
+    elif args.op == "attention":
+        sq, sk, d = _parse_shape(args.shape)
+        res = dispatch.tune_attention(sq, sk, d, args.dtype, keep=args.keep,
+                                      warmup=args.warmup, reps=args.reps,
+                                      force=args.force, cache=tc)
+    elif args.op == "sharded_gemm":
+        m, n, k = _parse_shape(args.shape)
+        da, ma = _parse_shape(args.mesh, 2)
+        res = dispatch.tune_sharded_gemm(m, k, n, args.dtype, data_axis=da,
+                                         model_axis=ma, force=args.force,
+                                         cache=tc)
+    else:  # pragma: no cover - argparse choices guard this
+        raise SystemExit(f"unknown op {args.op!r}")
+
+    for t in res.trials:
+        cfg = t.get("config")
+        us = t.get("us")
+        ok = t.get("ok", True)
+        print(f"  candidate {cfg} -> "
+              f"{us:.1f} us{'' if ok else '  [NUMERICS FAIL]'}")
+    print(res.summary())
+    print(f"cache: {tc.path}")
+    return 0 if res.best is not None else 1
+
+
+def cmd_show(args) -> int:
+    tc = _cache_from(args)
+    entries = {k: v for k, v in sorted(tc.entries.items())
+               if args.filter in k}
+    if args.json:
+        print(json.dumps(entries, indent=1, sort_keys=True))
+        return 0
+    if not entries:
+        print(f"(no entries{' matching ' + args.filter if args.filter else ''}"
+              f" in {tc.path})")
+        return 0
+    for key, e in entries.items():
+        us = e.get("us")
+        us_s = f"{us:.1f} us" if isinstance(us, (int, float)) else "-"
+        print(f"{key}\n    config={e.get('config')} {us_s}")
+    print(f"{len(entries)} entries in {tc.path}")
+    return 0
+
+
+def cmd_clear(args) -> int:
+    tc = _cache_from(args)
+    n = tc.clear()
+    dispatch.reset()
+    if args.cache:
+        dispatch.set_cache_path(args.cache)
+    print(f"cleared {n} entries ({tc.path})")
+    return 0
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.tuning.cli",
+        description="GAMA kernel autotuner (analytic prune + empirical "
+                    "measure + persistent cache)")
+    ap.add_argument("--cache", default=None,
+                    help=f"cache file (default {default_cache_path()}; "
+                         "or set $REPRO_TUNING_CACHE)")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    t = sub.add_parser("tune", help="tune one op/shape and persist the best")
+    t.add_argument("--op", choices=("gemm", "attention", "sharded_gemm"),
+                   default="gemm")
+    t.add_argument("--shape", required=True,
+                   help="gemm/sharded_gemm: M,N,K; attention: Sq,Sk,D")
+    t.add_argument("--dtype", default="bf16")
+    t.add_argument("--mesh", default="1,1",
+                   help="sharded_gemm: data_axis,model_axis")
+    t.add_argument("--keep", type=int, default=8,
+                   help="candidates surviving the analytic prune")
+    t.add_argument("--warmup", type=int, default=1)
+    t.add_argument("--reps", type=int, default=3)
+    t.add_argument("--force", action="store_true",
+                   help="re-measure even on a cache hit")
+    t.set_defaults(fn=cmd_tune)
+
+    s = sub.add_parser("show", help="list cached entries")
+    s.add_argument("--filter", default="", help="substring key filter")
+    s.add_argument("--json", action="store_true")
+    s.set_defaults(fn=cmd_show)
+
+    c = sub.add_parser("clear", help="drop all entries + delete the file")
+    c.set_defaults(fn=cmd_clear)
+    return ap
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    args = build_parser().parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

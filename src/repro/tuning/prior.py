@@ -1,0 +1,109 @@
+"""Analytic pruner — the paper's cost model as a *prior* over the space.
+
+Ranks candidates with the same quantities the Eq. 6 search optimizes
+(gamma = compute-time / stream-time, VMEM utilization, cascade depth tk)
+so only the top-``keep`` survive to empirical measurement.  The #1-ranked
+candidate doubles as the dispatch fallback on a cache miss: it is exactly
+the plan :func:`repro.core.tile_search.search_tpu_tiles` would pick, so
+untuned behavior is unchanged from the pre-tuning codebase.
+"""
+
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+from repro.core import hw
+from repro.core.tile_search import (search_tpu_tiles, tile_gamma,
+                                    tile_vmem_bytes)
+from repro.tuning.space import AttentionCandidate, DesignSpace, GemmCandidate
+
+
+def precision_for(dtype_name: str) -> hw.Precision:
+    """Map a jnp dtype name onto the paper's precision descriptors."""
+    if dtype_name in ("int8", "int16", "int32", "uint8"):
+        return hw.INT8_INT8
+    return hw.BF16_BF16
+
+
+def gemm_score(c: GemmCandidate, m: int, k: int, n: int,
+               precision: hw.Precision,
+               chip: hw.TpuChip = hw.TPU_V5E) -> Tuple:
+    """Sort key, higher = better.  Mirrors search_tpu_tiles' policy:
+    gamma (clipped — beyond ~4x compute-bound more gamma buys nothing),
+    then VMEM working set (reuse), then tk (deeper in-kernel cascade)."""
+    g = tile_gamma(c.tm, c.tk, c.tn, k, precision.in_bytes,
+                   precision.out_bytes, chip, precision)
+    vm = tile_vmem_bytes(c.tm, c.tk, c.tn, precision.in_bytes,
+                         precision.out_bytes)
+    # "mn" first on ties: it is the seed kernel's order (stable prior).
+    order_rank = 1 if c.order == "mn" else 0
+    return (round(min(g, 4.0), 3), vm, c.tk, order_rank)
+
+
+def prune_gemm(candidates: Sequence[GemmCandidate], m: int, k: int, n: int,
+               precision: hw.Precision, keep: int = 8,
+               chip: hw.TpuChip = hw.TPU_V5E) -> List[GemmCandidate]:
+    ranked = sorted(candidates,
+                    key=lambda c: gemm_score(c, m, k, n, precision, chip),
+                    reverse=True)
+    return ranked[:max(1, keep)]
+
+
+def analytic_gemm(m: int, k: int, n: int, dtype_name: str,
+                  chip: hw.TpuChip = hw.TPU_V5E) -> GemmCandidate:
+    """The cache-miss fallback: the pre-tuning planner's answer.
+
+    Reproduces kernels/ops.py's historical ``_pick_tiles`` exactly —
+    search_tpu_tiles over candidate grids shrunk for small problems — so
+    a cold cache dispatches identically to the seed codebase.
+    """
+    p = precision_for(dtype_name)
+    cands = [c for c in (128, 256, 512, 1024) if c <= max(m, 128)]
+    kcands = [c for c in (128, 256, 512, 1024, 2048) if c <= max(k, 128)]
+    ncands = sorted(set(c for c in (128, 256, 512, 1024) if c <= max(n, 128)))
+    plan = search_tpu_tiles(
+        m, k, n, p, chip=chip,
+        candidates=tuple(sorted(set(cands + ncands))),
+        k_candidates=tuple(kcands))
+    acc = "i32" if p.in_bytes == 1 else "f32"
+    return GemmCandidate(tm=plan.tm, tk=plan.tk, tn=plan.tn, order="mn",
+                         acc=acc)
+
+
+def attention_score(c: AttentionCandidate, sq: int, sk: int, d: int,
+                    in_bytes: int) -> Tuple:
+    """Prior for flash attention blocks.
+
+    Larger bk = fewer softmax-state revisits per q block (the KV axis is
+    the in-kernel cascade); larger bq amortizes the K/V stream across
+    more queries.  Penalize blocks that mostly pad the problem.
+    """
+    waste_q = (-sq) % c.bq
+    waste_k = (-sk) % c.bk
+    return (-(waste_q * sk + waste_k * sq), c.bk, c.bq)
+
+
+def prune_attention(candidates: Sequence[AttentionCandidate], sq: int,
+                    sk: int, d: int, in_bytes: int = 4,
+                    keep: int = 6) -> List[AttentionCandidate]:
+    ranked = sorted(
+        candidates,
+        key=lambda c: attention_score(c, sq, sk, d, in_bytes),
+        reverse=True)
+    return ranked[:max(1, keep)]
+
+
+def analytic_attention(sq: int, sk: int, d: int) -> AttentionCandidate:
+    """Cache-miss fallback: the seed kernels' default (128, 128) blocks."""
+    return AttentionCandidate(bq=128, bk=128)
+
+
+def analytic_cascade_g(m: int, k: int, n: int, data_axis: int,
+                       model_axis: int) -> dict:
+    """Pack-analogue prior for sharded GEMM: the planner's KCE sweep."""
+    from repro.core import planner
+    site = planner.GemmSite("tuned", m=m, k=k, n=n)
+    choices = planner.plan_cascade(site, data_axis, model_axis)
+    best = min(choices, key=lambda c: c.step_s)
+    return {"g": best.g, "x": best.x, "step_s": best.step_s,
+            "gamma": best.gamma}

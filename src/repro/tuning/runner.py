@@ -1,0 +1,142 @@
+"""Empirical measurement of pruned candidates.
+
+Times each surviving candidate on the actual backend — interpret mode on
+CPU (functional validation + relative cost), compiled Pallas on TPU —
+with warm-up and outlier rejection, and checks numerics against the
+pure-jnp oracle so a mis-tiled kernel can never win on speed while
+losing on correctness.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import statistics
+import time
+from typing import Callable, List, Optional
+
+import numpy as np
+
+from repro.tuning.space import AttentionCandidate, GemmCandidate
+
+
+@dataclasses.dataclass
+class Measurement:
+    us: float                  # robust per-call estimate
+    samples_us: List[float]    # raw per-rep timings
+    max_err: float             # |kernel - oracle| on the probe inputs
+    ok: bool                   # numerics within tolerance
+
+    def to_json(self) -> dict:
+        return {"us": self.us, "samples_us": self.samples_us,
+                "max_err": self.max_err, "ok": self.ok}
+
+
+def robust_us(samples: List[float], trim: float = 0.25) -> float:
+    """Median of the fastest (1 - trim) fraction — one-sided rejection.
+
+    Timing noise on a shared host is strictly additive (preemption, GC),
+    so slow outliers are discarded and fast samples trusted.
+    """
+    if not samples:
+        return float("nan")
+    keep = sorted(samples)[:max(1, int(len(samples) * (1.0 - trim)) or 1)]
+    return statistics.median(keep)
+
+
+def measure_fn(fn: Callable[[], object], warmup: int = 1,
+               reps: int = 5) -> List[float]:
+    """Per-rep wall times in microseconds, after ``warmup`` calls.
+
+    ``fn`` must materialize its result (np.asarray) so async dispatch
+    cannot hide the work.
+    """
+    for _ in range(max(0, warmup)):
+        fn()
+    out: List[float] = []
+    for _ in range(max(1, reps)):
+        t0 = time.perf_counter()
+        fn()
+        out.append((time.perf_counter() - t0) * 1e6)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Op-specific probes
+# ---------------------------------------------------------------------------
+
+
+def _probe_arrays(m: int, k: int, n: int, dtype_name: str, seed: int = 0):
+    import jax.numpy as jnp
+    rng = np.random.default_rng(seed)
+    if dtype_name.startswith("int") or dtype_name.startswith("uint"):
+        a = jnp.asarray(rng.integers(-128, 128, size=(m, k)), jnp.int8)
+        b = jnp.asarray(rng.integers(-128, 128, size=(k, n)), jnp.int8)
+    else:
+        dt = jnp.dtype(dtype_name)
+        a = jnp.asarray(rng.normal(size=(m, k)), dt)
+        b = jnp.asarray(rng.normal(size=(k, n)), dt)
+    return a, b
+
+
+def time_gemm(cand: GemmCandidate, m: int, k: int, n: int, dtype_name: str,
+              warmup: int = 1, reps: int = 3,
+              rtol: float = 2e-2) -> Measurement:
+    """Time one GEMM candidate via the public ops.matmul path (padding,
+    clamping, interpret-mode selection all included — what dispatch will
+    actually run)."""
+    from repro.kernels import ops, ref
+    a, b = _probe_arrays(m, k, n, dtype_name)
+    tiles = (cand.tm, cand.tk, cand.tn)
+
+    def run():
+        return np.asarray(ops.matmul(a, b, tiles=tiles, order=cand.order,
+                                     mode="kernel"))
+
+    samples = measure_fn(run, warmup=warmup, reps=reps)
+    got = run()
+    want = np.asarray(ref.ref_gemm(a, b))
+    err = float(np.max(np.abs(got.astype(np.float64)
+                              - want.astype(np.float64))))
+    scale = float(np.max(np.abs(want)) or 1.0)
+    ok = err <= rtol * scale
+    return Measurement(us=robust_us(samples), samples_us=samples,
+                       max_err=err, ok=ok)
+
+
+def time_attention(cand: AttentionCandidate, sq: int, sk: int, d: int,
+                   dtype_name: str = "float32", hq: int = 4, hkv: int = 2,
+                   warmup: int = 1, reps: int = 3,
+                   atol: float = 5e-2) -> Measurement:
+    """Time one flash-attention candidate through ops.attention."""
+    import jax.numpy as jnp
+
+    from repro.kernels import ops, ref
+    rng = np.random.default_rng(0)
+    dt = jnp.dtype(dtype_name)
+    q = jnp.asarray(rng.normal(size=(1, hq, sq, d)), dt)
+    k = jnp.asarray(rng.normal(size=(1, hkv, sk, d)), dt)
+    v = jnp.asarray(rng.normal(size=(1, hkv, sk, d)), dt)
+
+    def run():
+        return np.asarray(ops.attention(q, k, v, bq=cand.bq, bk=cand.bk,
+                                        mode="kernel"))
+
+    samples = measure_fn(run, warmup=warmup, reps=reps)
+    got = run()
+    want = np.asarray(ref.ref_attention(q, k, v))
+    err = float(np.max(np.abs(got.astype(np.float64)
+                              - want.astype(np.float64))))
+    return Measurement(us=robust_us(samples), samples_us=samples,
+                       max_err=err, ok=err <= atol)
+
+
+def pick_best(cands: List, results: List[Measurement]
+              ) -> Optional[int]:
+    """Index of the fastest *numerically-correct* candidate, or None."""
+    best_i: Optional[int] = None
+    for i, meas in enumerate(results):
+        if not meas.ok:
+            continue
+        if best_i is None or meas.us < results[best_i].us:
+            best_i = i
+    return best_i

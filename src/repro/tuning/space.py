@@ -1,0 +1,135 @@
+"""Design spaces for the autotuner — the legal kernel configurations.
+
+The GEMM space mirrors the paper's Eq. 6 search structure on the TPU:
+MXU-aligned (tm, tk, tn) BlockSpec tiles that fit the VMEM budget under
+Pallas double buffering, crossed with the grid traversal order (which of
+M/N is outermost — the analogue of choosing which operand stays resident
+across revisits) and the accumulator dtype (cascade payload width).  The
+pack-analogue G for sharded GEMM comes from the planner's KCE sweep
+divisors (paper Fig. 6).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence, Tuple
+
+from repro.core import hw
+from repro.core.tile_search import tile_vmem_bytes
+
+# Grid traversal orders for the GEMM kernel (K is always the innermost,
+# "arbitrary" dimension — the in-kernel cascade).  "mn" iterates M outermost
+# (B blocks are re-streamed per M tile row); "nm" iterates N outermost.
+GEMM_ORDERS = ("mn", "nm")
+
+
+@dataclasses.dataclass(frozen=True)
+class GemmCandidate:
+    """One point of the GEMM design space."""
+
+    tm: int
+    tk: int
+    tn: int
+    order: str = "mn"          # grid traversal, see GEMM_ORDERS
+    acc: str = "f32"           # accumulator dtype ("f32" floats, "i32" ints)
+    g: int = 1                 # pack-analogue for sharded GEMM (1 = local)
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_json(cls, d: dict) -> "GemmCandidate":
+        return cls(tm=int(d["tm"]), tk=int(d["tk"]), tn=int(d["tn"]),
+                   order=str(d.get("order", "mn")),
+                   acc=str(d.get("acc", "f32")), g=int(d.get("g", 1)))
+
+
+@dataclasses.dataclass(frozen=True)
+class AttentionCandidate:
+    """One point of the flash-attention design space."""
+
+    bq: int
+    bk: int
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_json(cls, d: dict) -> "AttentionCandidate":
+        return cls(bq=int(d["bq"]), bk=int(d["bk"]))
+
+
+def _round_up(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+class DesignSpace:
+    """Enumerators over legal candidates for each tunable op."""
+
+    TILE_CANDIDATES: Sequence[int] = (128, 256, 512, 1024)
+    K_TILE_CANDIDATES: Sequence[int] = (128, 256, 512, 1024, 2048)
+    BLOCK_CANDIDATES: Sequence[int] = (64, 128, 256, 512)
+
+    @classmethod
+    def gemm(cls, m: int, k: int, n: int, precision: hw.Precision,
+             chip: hw.TpuChip = hw.TPU_V5E,
+             orders: Sequence[str] = GEMM_ORDERS) -> List[GemmCandidate]:
+        """All MXU-aligned tile triples that fit VMEM, crossed with orders.
+
+        Tiles larger than the (aligned) problem are excluded — ops.matmul
+        would clamp them to duplicates anyway.
+        """
+        sub, lane = chip.min_tile(precision.in_bytes)
+        acc = "i32" if precision.in_bytes == 1 else "f32"
+        out: List[GemmCandidate] = []
+        for tm in cls.TILE_CANDIDATES:
+            if tm % sub or tm > max(_round_up(m, sub), sub):
+                continue
+            for tn in cls.TILE_CANDIDATES:
+                if tn % lane or tn > max(_round_up(n, lane), lane):
+                    continue
+                for tk in cls.K_TILE_CANDIDATES:
+                    if tk % lane or tk > max(_round_up(k, lane), lane):
+                        continue
+                    vm = tile_vmem_bytes(tm, tk, tn, precision.in_bytes,
+                                         precision.out_bytes)
+                    if vm > chip.vmem_budget:
+                        continue
+                    for order in orders:
+                        out.append(GemmCandidate(tm=tm, tk=tk, tn=tn,
+                                                 order=order, acc=acc))
+        if not out:
+            # Degenerate small problem: single minimum-aligned candidate.
+            out = [GemmCandidate(tm=sub, tk=lane, tn=lane, acc=acc)]
+        return out
+
+    @classmethod
+    def attention(cls, sq: int, sk: int, d: int, in_bytes: int = 4,
+                  chip: hw.TpuChip = hw.TPU_V5E
+                  ) -> List[AttentionCandidate]:
+        """(bq, bk) block pairs whose working set fits the VMEM budget."""
+        from repro.kernels.flash_attention import attention_vmem_bytes
+        bq_max = max(_round_up(sq, 8), cls.BLOCK_CANDIDATES[0])
+        bk_max = max(_round_up(sk, 128), cls.BLOCK_CANDIDATES[0])
+        out: List[AttentionCandidate] = []
+        for bq in cls.BLOCK_CANDIDATES:
+            if bq > bq_max:
+                continue
+            for bk in cls.BLOCK_CANDIDATES:
+                if bk > bk_max:
+                    continue
+                if attention_vmem_bytes(bq, bk, d, in_bytes) \
+                        > chip.vmem_budget:
+                    continue
+                out.append(AttentionCandidate(bq=bq, bk=bk))
+        return out or [AttentionCandidate(bq=128, bk=128)]
+
+    @classmethod
+    def cascade_g(cls, data_axis: int, model_axis: int) -> List[int]:
+        """Pack-size candidates for sharded GEMM: divisors of the model
+        axis, as in the paper's Fig. 6 KCE sweep (G x X = model_axis)."""
+        return [g for g in range(1, model_axis + 1) if model_axis % g == 0]
+
+
+def gemm_shape_key(m: int, k: int, n: int) -> Tuple[int, int, int]:
+    return (m, k, n)

@@ -1,0 +1,102 @@
+"""Minimal, dependency-free stand-in for the hypothesis API this suite uses.
+
+When ``hypothesis`` is installed the test modules import it directly and
+this file is inert.  Without it, tests still *run* (rather than being
+skipped wholesale) against deterministic pseudo-random samples: ``@given``
+draws ``max_examples`` examples per strategy from a fixed-seed RNG, so a
+bare container exercises the same properties reproducibly, just without
+hypothesis's shrinking and adaptive search.
+
+Supported surface (exactly what tests/ uses): ``given``, ``settings``
+with ``max_examples``/``deadline``, and strategies ``integers``,
+``sampled_from``, ``tuples``, ``composite``, plus ``.map``/``.filter``.
+"""
+
+from __future__ import annotations
+
+import random
+from typing import Any, Callable, List
+
+_DEFAULT_MAX_EXAMPLES = 25
+_FILTER_RETRIES = 5000
+
+
+class _Strategy:
+    def __init__(self, sample: Callable[[random.Random], Any]):
+        self._sample = sample
+
+    def example(self, rng: random.Random) -> Any:
+        return self._sample(rng)
+
+    def map(self, fn: Callable[[Any], Any]) -> "_Strategy":
+        return _Strategy(lambda rng: fn(self._sample(rng)))
+
+    def filter(self, pred: Callable[[Any], bool]) -> "_Strategy":
+        def sample(rng: random.Random) -> Any:
+            for _ in range(_FILTER_RETRIES):
+                v = self._sample(rng)
+                if pred(v):
+                    return v
+            raise RuntimeError("filter predicate too restrictive for the "
+                               "fallback strategy sampler")
+        return _Strategy(sample)
+
+
+class _StrategiesNamespace:
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def sampled_from(elements) -> _Strategy:
+        elements = list(elements)
+        return _Strategy(lambda rng: elements[rng.randrange(len(elements))])
+
+    @staticmethod
+    def tuples(*strategies: _Strategy) -> _Strategy:
+        return _Strategy(
+            lambda rng: tuple(s.example(rng) for s in strategies))
+
+    @staticmethod
+    def composite(fn: Callable) -> Callable[..., _Strategy]:
+        def factory(*args, **kwargs) -> _Strategy:
+            def sample(rng: random.Random):
+                return fn(lambda s: s.example(rng), *args, **kwargs)
+            return _Strategy(sample)
+        return factory
+
+
+st = _StrategiesNamespace()
+
+
+class settings:
+    """Decorator recording max_examples; deadline & co. are ignored."""
+
+    def __init__(self, max_examples: int = _DEFAULT_MAX_EXAMPLES, **_ignored):
+        self.max_examples = max_examples
+
+    def __call__(self, fn):
+        fn._stub_max_examples = self.max_examples
+        return fn
+
+
+def given(*strategies: _Strategy):
+    """Run the test once per drawn example (deterministic seed)."""
+
+    def deco(fn):
+        def wrapper(*args, **kwargs):
+            rng = random.Random(0)
+            n = getattr(wrapper, "_stub_max_examples",
+                        getattr(fn, "_stub_max_examples",
+                                _DEFAULT_MAX_EXAMPLES))
+            for _ in range(n):
+                drawn: List[Any] = [s.example(rng) for s in strategies]
+                fn(*args, *drawn, **kwargs)
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        if hasattr(fn, "_stub_max_examples"):
+            wrapper._stub_max_examples = fn._stub_max_examples
+        return wrapper
+
+    return deco

@@ -1,0 +1,12 @@
+"""Suite-wide fixtures.
+
+The tuning dispatch consulted by ops.matmul/ops.attention reads a
+persistent per-user cache by default; point it at a throwaway file so
+test results never depend on what a developer tuned locally.
+"""
+
+import os
+import tempfile
+
+os.environ["REPRO_TUNING_CACHE"] = os.path.join(
+    tempfile.mkdtemp(prefix="repro_tuning_test_"), "tuning_cache.json")

@@ -7,6 +7,7 @@ import subprocess
 import sys
 
 import jax
+from repro.launch.mesh import compat_make_mesh
 import jax.numpy as jnp
 import pytest
 
@@ -31,8 +32,7 @@ def test_multidevice_suite():
 class TestPolicyUnits:
     def _policy(self):
         from repro.distributed.sharding import ShardingPolicy
-        mesh = jax.make_mesh((1, 1), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = compat_make_mesh((1, 1), ("data", "model"))
         return ShardingPolicy(mesh=mesh, data_axes=("data",))
 
     def test_param_spec_rules(self):
@@ -52,8 +52,7 @@ class TestPolicyUnits:
 
     def test_sanitize_indivisible(self):
         from repro.distributed.sharding import ShardingPolicy
-        mesh = jax.make_mesh((1, 1), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = compat_make_mesh((1, 1), ("data", "model"))
         pol = ShardingPolicy(mesh=mesh, data_axes=("data",))
         # mesh axes are size 1 -> everything divides; simulate via spec
         spec = pol._sanitize(P("model", None), (7, 3))

@@ -1,9 +1,12 @@
 """TPU planner tests: tile search invariants (hypothesis), cascade cost
 model, block schedules, and HLO analysis."""
 
-import hypothesis
-from hypothesis import given, settings, strategies as st
 import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # deterministic fallback sampler, see _hypothesis_stub
+    from _hypothesis_stub import given, settings, st
 
 from repro.analysis.hlo import parse_collectives
 from repro.core import hw, planner

@@ -1,0 +1,268 @@
+"""repro.tuning subsystem tests: cache persistence + invalidation,
+analytic fallback, dispatch preference for cached configs, design-space
+legality, end-to-end tune with oracle numerics, and the CLI."""
+
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import hw
+from repro.kernels import ops, ref
+from repro.tuning import cache as cache_mod
+from repro.tuning import dispatch, prior
+from repro.tuning.cache import SCHEMA_VERSION, TuningCache, cache_key
+from repro.tuning.space import DesignSpace, GemmCandidate
+
+
+@pytest.fixture
+def tuning_cache(tmp_path):
+    """Fresh dispatch state bound to a per-test cache file."""
+    path = tmp_path / "tuning_cache.json"
+    dispatch.set_cache_path(path)
+    yield path
+    dispatch.reset()
+
+
+def _key_for(m, n, k, dtype="float32", op="gemm"):
+    backend, kind = dispatch.backend_fingerprint()
+    return cache_key(op, m, n, k, dtype, backend, kind)
+
+
+# ---------------------------------------------------------------------------
+# Cache persistence
+# ---------------------------------------------------------------------------
+
+
+class TestCache:
+    def test_roundtrip(self, tmp_path):
+        path = tmp_path / "c.json"
+        tc = TuningCache(path)
+        entry = {"config": {"tm": 256, "tk": 128, "tn": 256, "order": "nm"},
+                 "us": 12.5}
+        tc.put("gemm|m256|n256|k256|float32|cpu|cpu", entry)
+        tc.save()
+        tc2 = TuningCache(path).load()
+        assert tc2.get("gemm|m256|n256|k256|float32|cpu|cpu") == entry
+        assert len(tc2) == 1
+
+    def test_schema_mismatch_invalidates(self, tmp_path):
+        path = tmp_path / "c.json"
+        path.write_text(json.dumps({
+            "schema": SCHEMA_VERSION + 1,
+            "entries": {"gemm|m1|n1|k1|float32|cpu|cpu": {"us": 1.0}},
+        }))
+        tc = TuningCache(path).load()
+        assert len(tc) == 0
+
+    def test_corrupt_file_treated_as_empty(self, tmp_path):
+        path = tmp_path / "c.json"
+        path.write_text("not json {")
+        tc = TuningCache(path).load()
+        assert len(tc) == 0
+
+    def test_missing_file_is_empty(self, tmp_path):
+        tc = TuningCache(tmp_path / "nope.json").load()
+        assert len(tc) == 0
+
+    def test_clear_removes_file(self, tmp_path):
+        path = tmp_path / "c.json"
+        tc = TuningCache(path)
+        tc.put("k", {"us": 1.0})
+        tc.save()
+        assert path.exists()
+        assert tc.clear() == 1
+        assert not path.exists()
+        assert len(TuningCache(path).load()) == 0
+
+    def test_key_includes_all_components(self):
+        k1 = cache_key("gemm", 1, 2, 3, "bfloat16", "cpu", "cpu")
+        k2 = cache_key("gemm", 1, 2, 3, "bfloat16", "tpu", "v5e")
+        k3 = cache_key("attention", 1, 2, 3, "bfloat16", "cpu", "cpu")
+        assert len({k1, k2, k3}) == 3
+        assert cache_key("gemm", 1, 2, 3, "f", "b", "d", extra="mesh2x2") \
+            != cache_key("gemm", 1, 2, 3, "f", "b", "d")
+
+
+# ---------------------------------------------------------------------------
+# Dispatch: cache preference + analytic fallback
+# ---------------------------------------------------------------------------
+
+
+class TestDispatch:
+    def test_miss_falls_back_to_analytic(self, tuning_cache):
+        cfg = dispatch.gemm_config(512, 512, 512, jnp.float32)
+        assert cfg.source == "analytic"
+        want = prior.analytic_gemm(512, 512, 512, "float32")
+        assert (cfg.tm, cfg.tk, cfg.tn, cfg.order) == \
+            (want.tm, want.tk, want.tn, want.order)
+
+    def test_dispatch_picks_cached_config(self, tuning_cache):
+        tc = dispatch.get_cache()
+        tc.put(_key_for(512, 512, 512), {
+            "config": {"tm": 128, "tk": 256, "tn": 128, "order": "nm"},
+            "us": 1.0})
+        tc.save()
+        dispatch.set_cache_path(tuning_cache)  # drop memo, reload file
+        cfg = dispatch.gemm_config(512, 512, 512, jnp.float32)
+        assert cfg.source == "cache"
+        assert (cfg.tm, cfg.tk, cfg.tn, cfg.order) == (128, 256, 128, "nm")
+
+    def test_memo_hit_is_stable(self, tuning_cache):
+        c1 = dispatch.gemm_config(256, 256, 256, jnp.float32)
+        c2 = dispatch.gemm_config(256, 256, 256, jnp.float32)
+        assert c1 is c2
+
+    def test_attention_fallback_blocks(self, tuning_cache):
+        assert dispatch.attention_blocks(512, 512, 64, jnp.float32) \
+            == (128, 128)
+
+    def test_attention_cached_blocks(self, tuning_cache):
+        tc = dispatch.get_cache()
+        tc.put(_key_for(256, 512, 64, op="attention"),
+               {"config": {"bq": 64, "bk": 256}, "us": 1.0})
+        tc.save()
+        dispatch.set_cache_path(tuning_cache)
+        assert dispatch.attention_blocks(256, 512, 64, jnp.float32) \
+            == (64, 256)
+
+    def test_warm_gemm_shapes_counts_cache_hits(self, tuning_cache):
+        tc = dispatch.get_cache()
+        tc.put(_key_for(64, 128, 32), {
+            "config": {"tm": 128, "tk": 128, "tn": 128, "order": "mn"},
+            "us": 1.0})
+        tc.save()
+        dispatch.set_cache_path(tuning_cache)
+        hits = dispatch.warm_gemm_shapes([(64, 32, 128), (8, 16, 24)],
+                                         jnp.float32)
+        assert hits == 1
+
+    def test_canonical_dtype(self):
+        assert dispatch.canonical_dtype("bf16") == "bfloat16"
+        assert dispatch.canonical_dtype(jnp.bfloat16) == "bfloat16"
+        assert dispatch.canonical_dtype(jnp.dtype("float32")) == "float32"
+        assert dispatch.canonical_dtype(jnp.int8) == "int8"
+
+
+# ---------------------------------------------------------------------------
+# Design space + analytic prior
+# ---------------------------------------------------------------------------
+
+
+class TestSpaceAndPrior:
+    def test_gemm_space_is_legal(self):
+        p = hw.BF16_BF16
+        sub, lane = hw.TPU_V5E.min_tile(p.in_bytes)
+        cands = DesignSpace.gemm(1024, 1024, 1024, p)
+        assert cands
+        from repro.core.tile_search import tile_vmem_bytes
+        for c in cands:
+            assert c.tm % sub == 0 and c.tk % lane == 0 and c.tn % lane == 0
+            assert tile_vmem_bytes(c.tm, c.tk, c.tn, p.in_bytes,
+                                   p.out_bytes) <= hw.TPU_V5E.vmem_budget
+            assert c.order in ("mn", "nm")
+
+    def test_gemm_space_covers_both_orders(self):
+        orders = {c.order for c in DesignSpace.gemm(512, 512, 512,
+                                                    hw.BF16_BF16)}
+        assert orders == {"mn", "nm"}
+
+    def test_prune_keeps_top_k_with_analytic_first(self):
+        p = hw.BF16_BF16
+        cands = DesignSpace.gemm(512, 512, 512, p)
+        kept = prior.prune_gemm(cands, 512, 512, 512, p, keep=4)
+        assert len(kept) == 4
+        # The pruner's #1 must agree with the fallback plan's tiles, so an
+        # untuned dispatch and a keep=1 tune see the same candidate.
+        fallback = prior.analytic_gemm(512, 512, 512, "bfloat16")
+        assert (kept[0].tm, kept[0].tk, kept[0].tn) == \
+            (fallback.tm, fallback.tk, fallback.tn)
+
+    def test_candidate_json_roundtrip(self):
+        c = GemmCandidate(tm=256, tk=512, tn=128, order="nm", acc="f32")
+        assert GemmCandidate.from_json(c.to_json()) == c
+
+    def test_cascade_g_divisors(self):
+        assert DesignSpace.cascade_g(4, 16) == [1, 2, 4, 8, 16]
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: tune -> cache -> dispatch -> numerics oracle
+# ---------------------------------------------------------------------------
+
+
+class TestEndToEnd:
+    def test_tune_writes_cache_and_dispatch_uses_it(self, tuning_cache):
+        m = k = n = 128
+        res = dispatch.tune_gemm(m, k, n, "float32", keep=2, warmup=0,
+                                 reps=1)
+        assert not res.cache_hit and res.best is not None
+        assert tuning_cache.exists()
+        # Second tune: pure cache hit, nothing measured.
+        res2 = dispatch.tune_gemm(m, k, n, "float32")
+        assert res2.cache_hit and res2.trials == []
+        # Dispatch now prefers the tuned entry...
+        cfg = dispatch.gemm_config(m, k, n, jnp.float32)
+        assert cfg.source == "cache"
+        # ...and the kernel through ops.matmul matches the jnp oracle.
+        rng = np.random.default_rng(0)
+        a = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+        b = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+        got = np.asarray(ops.matmul(a, b, mode="kernel"))
+        want = np.asarray(ref.ref_gemm(a, b))
+        np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-4)
+
+    def test_untuned_matmul_matches_oracle(self, tuning_cache):
+        # Cache miss end to end: analytic fallback, identical numerics.
+        rng = np.random.default_rng(1)
+        a = jnp.asarray(rng.normal(size=(100, 200)), jnp.float32)
+        b = jnp.asarray(rng.normal(size=(200, 60)), jnp.float32)
+        got = np.asarray(ops.matmul(a, b, mode="kernel"))
+        want = np.asarray(ref.ref_gemm(a, b))
+        np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-4)
+
+    def test_sharded_gemm_tune_is_analytic(self, tuning_cache):
+        res = dispatch.tune_sharded_gemm(4096, 1024, 2048, "bf16",
+                                         data_axis=4, model_axis=16)
+        assert res.best is not None
+        assert res.best["g"] in DesignSpace.cascade_g(4, 16)
+        res2 = dispatch.tune_sharded_gemm(4096, 1024, 2048, "bf16",
+                                          data_axis=4, model_axis=16)
+        assert res2.cache_hit
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+
+class TestCli:
+    def test_tune_show_clear(self, tmp_path, capsys):
+        from repro.tuning import cli
+        cache = str(tmp_path / "cli_cache.json")
+        rc = cli.main(["--cache", cache, "tune", "--op", "gemm",
+                       "--shape", "128,128,128", "--dtype", "f32",
+                       "--keep", "1", "--reps", "1", "--warmup", "0"])
+        assert rc == 0
+        out = capsys.readouterr().out
+        assert "tuned gemm|m128|n128|k128|float32" in out
+
+        rc = cli.main(["--cache", cache, "tune", "--op", "gemm",
+                       "--shape", "128,128,128", "--dtype", "f32"])
+        assert rc == 0
+        assert "cache hit" in capsys.readouterr().out
+
+        rc = cli.main(["--cache", cache, "show"])
+        assert rc == 0
+        assert "gemm|m128|n128|k128" in capsys.readouterr().out
+
+        rc = cli.main(["--cache", cache, "clear"])
+        assert rc == 0
+        assert "cleared 1 entries" in capsys.readouterr().out
+        dispatch.reset()
+
+    def test_bad_shape_rejected(self):
+        from repro.tuning import cli
+        with pytest.raises(SystemExit):
+            cli.main(["tune", "--op", "gemm", "--shape", "12,12"])
