@@ -1,22 +1,37 @@
-"""Benchmark harness — one function per paper table/figure.
+"""Benchmark harness — one function per paper table/figure, organized in
+the paper's three evaluation levels.
 
-Prints ``name,us_per_call,derived`` CSV rows.  The paper-table benches
-reproduce Tables II-VI + Fig. 6/7 from the analytical chain (exact values
-side-by-side with the paper's); the TPU benches exercise the GAMA planner
-and the Pallas kernels (interpret mode) on this host.
+Prints ``name,us_per_call,derived`` CSV rows.  ``--level`` selects the
+scaling level, mirroring how GAMA evaluates single AIE -> pack -> array:
 
-Run: PYTHONPATH=src python -m benchmarks.run [--filter substr]
+* ``single`` (default): the paper-table benches (Tables II-VI, Figs.
+  6/7 from the analytic chain) plus the single-kernel Pallas/planner/
+  tuning benches — everything that runs on one device;
+* ``pack``: pack-level sharded GEMM (``distributed.pack_gemm``) on a
+  simulated 8-device mesh — (P, Q) grids, stagger offsets and reduce
+  orders — plus the tuning pass that measures and caches the pack grid,
+  the flash-decode split-K block and the WKV chunk;
+* ``array``: the full-mesh level — packs composed over the data axis
+  (``array_gemm``) and a small model served with its lm-head/ffn GEMMs
+  sharded through packs.
+
+Run: PYTHONPATH=src python -m benchmarks.run [--level single|pack|array]
+                                             [--filter substr]
                                              [--json BENCH_out.json]
 
 ``--json`` additionally writes the rows as machine-readable JSON
-(``{"schema": 1, "rows": [{name, us_per_call, derived}, ...]}``) so the
-perf trajectory can be tracked across commits.
+(``{"schema": 1, "level": L, "rows": [{name, us_per_call, derived},
+...]}``) so the perf trajectory can be tracked across commits (e.g.
+``BENCH_pack.json``).  The pack/array levels set
+``--xla_force_host_platform_device_count=8`` before jax initializes
+(unless XLA_FLAGS is already set), so they run anywhere.
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import time
 from typing import Callable, Dict, List, Tuple
 
@@ -210,6 +225,112 @@ def bench_tuning_dispatch() -> None:
          f"tile=({cfg.tm}x{cfg.tk}x{cfg.tn},{cfg.order})")
 
 
+# ---------------------------------------------------------------------------
+# Pack level: sharded GEMM over a simulated multi-device mesh
+# ---------------------------------------------------------------------------
+
+
+def _pack_mesh(data: int, model: int):
+    from repro.launch.mesh import compat_make_mesh
+    return compat_make_mesh((data, model), ("data", "model"))
+
+
+def bench_pack_gemm() -> None:
+    """Pack-level sweep: (P, Q) grids x reduce schedules, numerics vs
+    the reference GEMM (the ring changes the summation order)."""
+    import jax.numpy as jnp
+
+    import repro.distributed.pack_gemm as pg
+    from repro.kernels import ref
+    mesh = _pack_mesh(1, 8)
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.normal(size=(128, 256)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(256, 128)), jnp.float32)
+    want = np.asarray(ref.ref_gemm(a, b))
+    for (p, q, stagger, red) in [(1, 8, 0, "psum"), (2, 4, 0, "psum"),
+                                 (2, 4, 1, "ring"), (4, 2, 1, "ring")]:
+        us, out = timed(lambda: np.asarray(pg.pack_gemm(
+            a, b, mesh, p=p, q=q, stagger=stagger, reduce=red)), reps=2)
+        err = float(np.max(np.abs(out - want)))
+        emit(f"pack.gemm.p{p}q{q}.{red}_s{stagger}", us,
+             f"maxerr={err:.2e}")
+
+
+def bench_pack_tuning() -> None:
+    """Measured pack-grid tuning on the live mesh, plus the decode bk
+    and WKV chunk tunables — populates the persistent cache."""
+    from repro.tuning import dispatch
+
+    res = dispatch.tune_pack(128, 256, 128, "float32", data_axis=1,
+                             model_axis=8, keep=3, warmup=0, reps=1)
+    emit("pack.tune.pack_grid", res.best_us or 0.0,
+         f"best={res.best} measured={len(res.trials)} "
+         f"hit={res.cache_hit}")
+    res = dispatch.tune_decode(512, 64, "float32", keep=3, warmup=0,
+                               reps=1)
+    emit("pack.tune.flash_decode_bk", res.best_us or 0.0,
+         f"best={res.best} hit={res.cache_hit}")
+    res = dispatch.tune_wkv(256, 32, "float32", keep=3, warmup=0, reps=1)
+    emit("pack.tune.wkv_chunk", res.best_us or 0.0,
+         f"best={res.best} hit={res.cache_hit}")
+    from repro.tuning.cache import default_cache_path
+    emit("pack.tune.cache", 0.0,
+         f"entries={len(dispatch.get_cache().entries)} "
+         f"path={default_cache_path()}")
+
+
+# ---------------------------------------------------------------------------
+# Array level: packs composed over the data axis (the full mesh)
+# ---------------------------------------------------------------------------
+
+
+def bench_array_gemm() -> None:
+    """Full-mesh collective matmul: M over data, (P, Q) over model."""
+    import jax.numpy as jnp
+
+    import repro.distributed.pack_gemm as pg
+    from repro.kernels import ref
+    mesh = _pack_mesh(2, 4)
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.normal(size=(256, 256)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(256, 128)), jnp.float32)
+    want = np.asarray(ref.ref_gemm(a, b))
+    for (p, q) in [(1, 4), (2, 2), (4, 1)]:
+        us, out = timed(lambda: np.asarray(pg.array_gemm(
+            a, b, mesh, p=p, q=q, stagger=1,
+            reduce="ring" if p > 1 else "psum")), reps=2)
+        err = float(np.max(np.abs(out - want)))
+        emit(f"array.gemm.2x4.p{p}q{q}", us, f"maxerr={err:.2e}")
+
+
+def bench_array_serve() -> None:
+    """A small model served with its lm-head/ffn GEMMs sharded through
+    packs (ServeConfig.pack_mesh) — the array level end to end."""
+    import jax
+
+    from repro.models import ModelConfig, init_params
+    from repro.serving.engine import ServeConfig, ServeEngine
+    cfg = ModelConfig(name="bench", n_layers=2, d_model=64, n_heads=4,
+                      n_kv_heads=2, d_head=16, d_ff=128, vocab_size=256,
+                      compute_dtype="float32", cache_dtype="float32")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    mesh = _pack_mesh(2, 4)
+    scfg = ServeConfig(batch_slots=4, max_len=64, pack_mesh=mesh,
+                       pack_min_flops=4e6)
+    engine = ServeEngine(cfg, params, scfg)
+    try:
+        prompts = np.random.default_rng(0).integers(
+            0, 256, size=(4, 16)).astype(np.int32)
+        max_new = 4
+        us, out = timed(lambda: engine.generate(prompts, max_new), reps=1)
+        toks_s = 4 * max_new / (us / 1e6)
+        emit("array.serve.packed", us,
+             f"packed_gemms={engine.packed_gemms} "
+             f"tok_s={toks_s:.1f} out_shape={out.shape}")
+    finally:
+        engine.close()
+
+
 BENCHES = [
     ("table2", bench_table2),
     ("table3", bench_table3),
@@ -224,21 +345,47 @@ BENCHES = [
     ("roofline", bench_roofline_summary),
 ]
 
+PACK_BENCHES = [
+    ("pack_gemm", bench_pack_gemm),
+    ("pack_tuning", bench_pack_tuning),
+]
+
+ARRAY_BENCHES = [
+    ("array_gemm", bench_array_gemm),
+    ("array_serve", bench_array_serve),
+]
+
+LEVELS = {"single": BENCHES, "pack": PACK_BENCHES, "array": ARRAY_BENCHES}
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
+    ap.add_argument("--level", choices=sorted(LEVELS), default="single",
+                    help="evaluation level: single kernel, pack, or "
+                         "full-array (pack/array simulate an 8-device "
+                         "CPU mesh)")
     ap.add_argument("--filter", type=str, default="")
     ap.add_argument("--json", type=str, default=None, metavar="PATH",
                     help="also write rows as JSON (e.g. BENCH_tpu.json)")
     args = ap.parse_args()
+    if args.level != "single":
+        # Must precede any jax initialization (no bench imported jax
+        # yet).  Append to any preexisting XLA_FLAGS; an explicit
+        # device-count flag from the caller wins.
+        flags = os.environ.get("XLA_FLAGS", "")
+        if "xla_force_host_platform_device_count" not in flags:
+            os.environ["XLA_FLAGS"] = (
+                flags + " --xla_force_host_platform_device_count=8"
+            ).strip()
     print("name,us_per_call,derived")
-    for name, fn in BENCHES:
+    for name, fn in LEVELS[args.level]:
         if args.filter and args.filter not in name:
             continue
         fn()
     if args.json:
         with open(args.json, "w") as f:
-            json.dump({"schema": 1, "rows": ROWS}, f, indent=1)
+            json.dump({"schema": 1, "level": args.level, "rows": ROWS},
+                      f, indent=1)
         print(f"# wrote {len(ROWS)} rows to {args.json}")
 
 

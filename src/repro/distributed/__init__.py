@@ -1,14 +1,26 @@
 """Distribution: sharding policies (pjit), explicit cascade collectives
-(shard_map), pipeline parallelism, and gradient compression."""
+(shard_map), pack/array-level sharded GEMM, pipeline parallelism, and
+gradient compression.  See docs/ARCHITECTURE.md for the module map."""
 
 from repro.distributed.cascade import (cascade_ffn, cascade_ffn_reference,
                                        cascade_groups, cascade_matmul,
                                        cross_groups)
 from repro.distributed.compression import (compressed_grad_mean,
                                            compressed_mean_flat)
+# NOTE: the pack_gemm *module* stays the package attribute (so
+# ``repro.distributed.pack_gemm.pack_gemm`` is the GEMM entrypoint);
+# only the non-clashing helpers are re-exported at package level.
+from repro.distributed import pack_gemm
+from repro.distributed.pack_gemm import (PackContext, array_gemm,
+                                         clear_pack_context,
+                                         get_pack_context, pack_context,
+                                         set_pack_context)
 from repro.distributed.pipeline import pipeline_apply
 from repro.distributed.sharding import ShardingPolicy
 
 __all__ = ["cascade_ffn", "cascade_ffn_reference", "cascade_groups",
            "cascade_matmul", "cross_groups", "compressed_grad_mean",
-           "compressed_mean_flat", "pipeline_apply", "ShardingPolicy"]
+           "compressed_mean_flat", "pipeline_apply", "ShardingPolicy",
+           "PackContext", "array_gemm", "clear_pack_context",
+           "get_pack_context", "pack_context", "pack_gemm",
+           "set_pack_context"]

@@ -28,13 +28,21 @@ from repro.distributed._compat import shard_map
 
 
 def cascade_groups(w: int, g: int):
-    """w/g contiguous subgroups of size g: [[0..g-1], [g..2g-1], ...]."""
+    """w/g contiguous subgroups of size g: [[0..g-1], [g..2g-1], ...].
+
+    >>> cascade_groups(8, 4)
+    [[0, 1, 2, 3], [4, 5, 6, 7]]
+    """
     return [list(map(int, row)) for row in np.arange(w).reshape(w // g, g)]
 
 
 def cross_groups(w: int, g: int):
     """g strided groups of size w/g linking equal cascade positions:
-    [[j, j+g, j+2g, ...] for j in range(g)]."""
+    [[j, j+g, j+2g, ...] for j in range(g)].
+
+    >>> cross_groups(8, 4)
+    [[0, 4], [1, 5], [2, 6], [3, 7]]
+    """
     return [list(map(int, row)) for row in np.arange(w).reshape(w // g, g).T]
 
 

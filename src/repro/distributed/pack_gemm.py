@@ -1,0 +1,325 @@
+"""Pack-level sharded GEMM — the paper's three-level scaling, made real.
+
+GAMA evaluates GEMM at three levels: a single AIE kernel, a *pack* of
+engines chained over K with staggered placement (Figs. 3/4/7), and the
+full 8x50 array.  This module is the pack and array levels for the TPU
+re-targeting:
+
+* **pack level** (:func:`pack_gemm`): a 2D ``(P, Q)`` pack grid laid over
+  the mesh's model axis (``P * Q == |model|``).  ``P`` shards K — the
+  cascade direction — and ``Q`` shards N.  A/B are placed
+  *block-cyclically* over the P cascade positions (:func:`block_cyclic_index`)
+  so padded tail blocks spread across engines instead of landing on the
+  last one; each device runs a local Pallas GEMM (through
+  :func:`repro.kernels.ops.matmul`, so the tuner's tile configs apply),
+  and partial sums combine with a **staggered ring reduce**
+  (:func:`staggered_ring_all_reduce`): each pack column starts its ring
+  schedule at a stagger-shifted chunk, the collective-permute analogue of
+  the paper's congestion-avoiding staggered kernel placement (Fig. 7).
+* **array level** (:func:`array_gemm`): composes packs across the data
+  axis — M shards over ``data``, every data row runs the pack dataflow
+  over ``model`` — one ``shard_map`` over the full mesh, the collective
+  matmul the complete array executes.
+
+Dispatch: :func:`set_pack_context` installs a process-level context;
+``ops.matmul`` (and therefore every model GEMM) routes through
+:func:`pack_gemm` when the problem clears the context's FLOP threshold.
+Pack-grid shape, stagger offset and reduce order default to the tuning
+cache via ``repro.tuning.dispatch.pack_config``.
+
+Numerics match :func:`repro.kernels.ref.ref_gemm` for float (dtype
+tolerance; the ring changes the summation order) and exactly for int8
+(int32 partial sums are associative; requantization happens once, after
+the full reduction).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.distributed._compat import shard_map
+from repro.kernels import ref
+
+__all__ = [
+    "PackContext", "set_pack_context", "get_pack_context",
+    "clear_pack_context", "pack_context", "pack_coords",
+    "block_cyclic_index", "staggered_ring_all_reduce", "pack_gemm",
+    "array_gemm",
+]
+
+
+def _round_up(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+# ---------------------------------------------------------------------------
+# Pack geometry
+# ---------------------------------------------------------------------------
+
+
+def pack_coords(w: int, p: int):
+    """Map model-axis device m to its (column q_i, cascade position j).
+
+    Device numbering follows cascade.py: ``m = q_i * p + j`` — the P
+    members of one pack column are contiguous on the axis.
+
+    >>> pack_coords(8, 2)
+    [(0, 0), (0, 1), (1, 0), (1, 1), (2, 0), (2, 1), (3, 0), (3, 1)]
+    """
+    return [(m // p, m % p) for m in range(w)]
+
+
+def block_cyclic_index(p: int, cycles: int) -> np.ndarray:
+    """K-block ownership: row j lists the blocks cascade position j holds.
+
+    Block b goes to position ``b % p`` — cyclic, so when K does not
+    divide evenly the zero-padded tail blocks spread across positions
+    instead of piling onto the last one.
+
+    >>> block_cyclic_index(2, 2).tolist()
+    [[0, 2], [1, 3]]
+    >>> block_cyclic_index(4, 1).tolist()
+    [[0], [1], [2], [3]]
+    """
+    return np.arange(p * cycles).reshape(cycles, p).T
+
+
+# ---------------------------------------------------------------------------
+# Staggered ring reduce
+# ---------------------------------------------------------------------------
+
+
+def staggered_ring_all_reduce(x: jax.Array, axis_name: str, p: int,
+                              perm, stagger: int) -> jax.Array:
+    """Ring all-reduce over each P-subgroup with a per-column stagger.
+
+    ``x``: the local partial, chunked into ``p`` pieces along axis 0.
+    ``perm`` must be the disjoint union of subgroup rings (device
+    ``qi*p + j`` sends to ``qi*p + (j+1) % p``).  Column ``qi`` starts
+    its schedule at chunk offset ``qi * stagger`` — at any step,
+    staggered columns move *different* chunk indices, the schedule-level
+    stand-in for the paper's staggered kernel placement (every column
+    shares links on a real torus; shifting the schedule avoids all
+    columns hammering the same buffer slot at once).  The offset only
+    relabels chunks within a ring, so the reduced value is unchanged.
+
+    Runs inside ``shard_map``; the 2*(p-1) steps are the standard
+    reduce-scatter + all-gather rings.
+    """
+    rows = x.shape[0] // p
+    idx = jax.lax.axis_index(axis_name)
+    j = idx % p
+    off = (idx // p) * stagger
+
+    def take(arr, c):
+        return jax.lax.dynamic_slice_in_dim(arr, (c % p) * rows, rows, 0)
+
+    def put(arr, c, val):
+        return jax.lax.dynamic_update_slice_in_dim(arr, val,
+                                                   (c % p) * rows, 0)
+
+    acc = x
+    # Reduce-scatter: after step t, chunk (j-1-t) holds t+2 contributions;
+    # after p-1 steps device j owns the fully-reduced chunk (j+1+off).
+    for t in range(p - 1):
+        recv = jax.lax.ppermute(take(acc, j - t + off), axis_name, perm)
+        tgt = j - 1 - t + off
+        acc = put(acc, tgt, take(acc, tgt) + recv)
+    # All-gather: circulate completed chunks around the same ring.
+    for t in range(p - 1):
+        recv = jax.lax.ppermute(take(acc, j + 1 - t + off), axis_name, perm)
+        acc = put(acc, j - t + off, recv)
+    return acc
+
+
+# ---------------------------------------------------------------------------
+# Pack / array GEMM
+# ---------------------------------------------------------------------------
+
+
+def pack_gemm(a: jax.Array, b: jax.Array, mesh: Mesh, *,
+              p: Optional[int] = None, q: Optional[int] = None,
+              stagger: Optional[int] = None, reduce: Optional[str] = None,
+              cycles: int = 2, model_axis: str = "model",
+              data_axis: Optional[str] = None, out_dtype=None,
+              scale: float = 1.0, mode: str = "auto") -> jax.Array:
+    """C = a @ b over a (P, Q) pack grid on the mesh's model axis.
+
+    a: (M, K); b: (K, N).  ``p`` shards K block-cyclically (the cascade),
+    ``q`` shards N; ``p * q`` must equal the model-axis size.  When
+    ``data_axis`` is given, M additionally shards across it (the array
+    level — see :func:`array_gemm`).  Unspecified grid parameters come
+    from the tuning cache (``dispatch.pack_config``), falling back to the
+    planner's analytic KCE sweep.
+
+    ``reduce``: ``"ring"`` — the staggered ring schedule (default for
+    p > 1); ``"psum"`` — XLA's subgroup psum (the unstaggered baseline).
+    ``mode`` selects the *local* GEMM backend exactly like ``ops.matmul``
+    (``"auto"`` = Pallas on TPU, jnp reference elsewhere).
+
+    Non-divisible M/N/K are zero-padded and sliced; int8 inputs
+    accumulate in int32 across the whole pack and requantize once at the
+    end, matching ``ref.ref_gemm`` bit-for-bit.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    w = mesh.shape[model_axis]
+    d = mesh.shape[data_axis] if data_axis else 1
+
+    if p is None or q is None or stagger is None or reduce is None:
+        from repro.tuning import dispatch
+        cand = dispatch.pack_config(m, k, n, a.dtype, data_axis=d,
+                                    model_axis=w)
+        p = cand.p if p is None else p
+        q = cand.q if q is None else q
+        stagger = cand.stagger if stagger is None else stagger
+        reduce = cand.reduce if reduce is None else reduce
+    assert p * q == w, f"pack grid {p}x{q} != model axis {w}"
+    assert reduce in ("ring", "psum"), reduce
+
+    integer = jnp.issubdtype(a.dtype, jnp.integer)
+    acc_dtype = jnp.int32 if integer else jnp.float32
+    if out_dtype is None:
+        out_dtype = jnp.int32 if integer else a.dtype
+    out_dtype = jnp.dtype(out_dtype)
+
+    cyc = cycles if k >= p * cycles else 1
+    mp = _round_up(max(m, 1), d * p)
+    kp = _round_up(max(k, 1), p * cyc)
+    np_ = _round_up(max(n, 1), q)
+    kb = kp // (p * cyc)
+    nq = np_ // q
+    md = mp // d
+
+    ap = jnp.pad(a, ((0, mp - m), (0, kp - k)))
+    bp = jnp.pad(b, ((0, kp - k), (0, np_ - n)))
+    bc = block_cyclic_index(p, cyc)                   # (p, cyc) block ids
+
+    # A stacked per (data row, model device): device (di, qi*p + j) gets
+    # rows di and K blocks bc[j] — identical across pack columns qi.
+    a4 = ap.reshape(d, md, p * cyc, kb)
+    a_sel = a4[:, :, bc.reshape(-1), :].reshape(d, md, p, cyc, kb)
+    a_sel = a_sel.transpose(0, 2, 1, 3, 4).reshape(d, p, md, cyc * kb)
+    ag = jnp.broadcast_to(a_sel[:, None], (d, q, p, md, cyc * kb))
+    ag = ag.reshape(d, w, md, cyc * kb)
+
+    # B stacked per model device: device qi*p + j gets K blocks bc[j] and
+    # N column qi (replicated over the data axis by the in_spec).
+    b4 = bp.reshape(p * cyc, kb, q, nq)
+    b_sel = b4[bc.reshape(-1)].reshape(p, cyc, kb, q, nq)
+    bg = b_sel.transpose(3, 0, 1, 2, 4).reshape(w, cyc * kb, nq)
+
+    perm = [(qi * p + j, qi * p + (j + 1) % p)
+            for qi in range(q) for j in range(p)]
+    groups = [list(range(qi * p, (qi + 1) * p)) for qi in range(q)]
+    da = data_axis if data_axis else None
+
+    def local(a_l, b_l):
+        partial = _local_matmul(a_l[0, 0], b_l[0], acc_dtype, mode)
+        if p == 1:
+            red = partial
+        elif reduce == "psum":
+            red = jax.lax.psum(partial, model_axis,
+                               axis_index_groups=groups)
+        else:
+            red = staggered_ring_all_reduce(partial, model_axis, p, perm,
+                                            stagger)
+        return red[None, None]
+
+    fn = shard_map(local, mesh=mesh,
+                   in_specs=(P(da, model_axis, None, None),
+                             P(model_axis, None, None)),
+                   out_specs=P(da, model_axis, None, None),
+                   check_vma=False)
+    out = fn(ag, bg)                                   # (d, w, Md, nq)
+    # Every member of a column holds the full reduction; keep j == 0.
+    out = out[:, ::p]                                  # (d, q, Md, nq)
+    out = out.transpose(0, 2, 1, 3).reshape(mp, np_)[:m, :n]
+    # Requantize exactly once, after the full cross-device reduction.
+    return ref.requantize(out, out_dtype, scale)
+
+
+def array_gemm(a: jax.Array, b: jax.Array, mesh: Mesh, *,
+               data_axis: str = "data", **kwargs) -> jax.Array:
+    """Full-mesh collective matmul: packs composed across the data axis.
+
+    M shards over ``data_axis``; within each data row the (P, Q) pack
+    dataflow runs over the model axis — the complete-array level of the
+    paper's evaluation.  Accepts every :func:`pack_gemm` keyword.
+    """
+    return pack_gemm(a, b, mesh, data_axis=data_axis, **kwargs)
+
+
+def _local_matmul(a_l: jax.Array, b_l: jax.Array, acc_dtype,
+                  mode: str) -> jax.Array:
+    """Per-device GEMM in the accumulation dtype (no requant — that
+    happens once, after the cross-device reduction)."""
+    from repro.kernels import ops
+    return ops.matmul(a_l, b_l, out_dtype=acc_dtype, mode=mode,
+                      allow_pack=False)
+
+
+# ---------------------------------------------------------------------------
+# Process-level dispatch context (consulted by kernels/ops.py)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PackContext:
+    """Routes large GEMMs through :func:`pack_gemm`.
+
+    ``min_flops`` is the dispatch threshold on ``2*M*K*N`` — below it a
+    single kernel wins (collective latency dominates), mirroring the
+    paper's observation that packs only pay off once the problem covers
+    the array.
+    """
+
+    mesh: Mesh
+    model_axis: str = "model"
+    data_axis: Optional[str] = None
+    min_flops: float = 2.0 * 1024 ** 3
+
+    def eligible(self, m: int, k: int, n: int) -> bool:
+        return 2.0 * m * k * n >= self.min_flops
+
+
+_CONTEXT: Optional[PackContext] = None
+
+
+def set_pack_context(mesh: Mesh, *, model_axis: str = "model",
+                     data_axis: Optional[str] = None,
+                     min_flops: float = 2.0 * 1024 ** 3) -> PackContext:
+    """Install the process-level pack context; returns it."""
+    global _CONTEXT
+    _CONTEXT = PackContext(mesh=mesh, model_axis=model_axis,
+                           data_axis=data_axis, min_flops=min_flops)
+    return _CONTEXT
+
+
+def get_pack_context() -> Optional[PackContext]:
+    return _CONTEXT
+
+
+def clear_pack_context() -> None:
+    global _CONTEXT
+    _CONTEXT = None
+
+
+@contextlib.contextmanager
+def pack_context(mesh: Mesh, **kwargs):
+    """Scoped :func:`set_pack_context` (tests, benchmarks)."""
+    global _CONTEXT
+    prev = _CONTEXT
+    set_pack_context(mesh, **kwargs)
+    try:
+        yield _CONTEXT
+    finally:
+        _CONTEXT = prev

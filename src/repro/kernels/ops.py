@@ -8,6 +8,12 @@ alignment, GQA group padding, and backend dispatch:
   code falls back to the mathematically-identical ref for speed);
 * mode="kernel": force the Pallas kernel (interpret=True off-TPU);
 * mode="ref": force the jnp oracle.
+
+Above the pack threshold, :func:`matmul` additionally dispatches to the
+pack-level sharded GEMM (``repro.distributed.pack_gemm``) when a pack
+context is installed — the paper's three-level scaling: single kernel
+below the threshold, pack/array collective matmul above it.  ``mode``
+then selects the backend of each *local* per-device GEMM.
 """
 
 from __future__ import annotations
@@ -56,11 +62,37 @@ def _pick_tiles(m: int, k: int, n: int, dtype) -> tuple[int, int, int, str]:
     return cfg.tm, cfg.tk, cfg.tn, cfg.order
 
 
+def pack_eligible(m: int, k: int, n: int) -> bool:
+    """True when a pack context is installed and (M, K, N) clears its
+    FLOP threshold — i.e. matmul() would route to the pack-level GEMM."""
+    import repro.distributed.pack_gemm as pg
+    ctx = pg.get_pack_context()
+    return ctx is not None and ctx.eligible(m, k, n)
+
+
 def matmul(a: jax.Array, b: jax.Array, *, out_dtype=None, scale: float = 1.0,
            tiles: Optional[tuple[int, int, int]] = None,
            order: Optional[str] = None,
-           mode: Mode = "auto") -> jax.Array:
-    """GAMA GEMM with padding + planning.  a: (M, K); b: (K, N)."""
+           mode: Mode = "auto", allow_pack: bool = True) -> jax.Array:
+    """GAMA GEMM with padding + planning.  a: (M, K); b: (K, N).
+
+    With a pack context installed (``distributed.pack_gemm``), problems
+    above the context's FLOP threshold run as a pack/array-level
+    collective matmul instead of one kernel; ``allow_pack=False`` opts
+    out (used by pack_gemm itself for the per-device local GEMM, and by
+    callers that must stay single-device).  Explicit ``tiles``/``order``
+    overrides also pin the call to the single-kernel path — they
+    describe one kernel's grid, which the pack route would ignore.
+    ``mode="ref"`` always means the single-process jnp oracle.
+    """
+    if allow_pack and mode != "ref" and tiles is None and order is None:
+        import repro.distributed.pack_gemm as pg
+        ctx = pg.get_pack_context()
+        if ctx is not None and ctx.eligible(a.shape[0], a.shape[1],
+                                            b.shape[1]):
+            return pg.pack_gemm(a, b, ctx.mesh, model_axis=ctx.model_axis,
+                                data_axis=ctx.data_axis,
+                                out_dtype=out_dtype, scale=scale, mode=mode)
     if not _use_kernel(mode):
         return ref.ref_gemm(a, b, out_dtype=out_dtype, scale=scale)
     m, k = a.shape
@@ -118,14 +150,22 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
 
 
 def decode(q: jax.Array, k: jax.Array, v: jax.Array, *,
-           length: Optional[jax.Array] = None, bk: int = 512,
+           length: Optional[jax.Array] = None, bk: Optional[int] = None,
            scale: Optional[float] = None, mode: Mode = "auto") -> jax.Array:
-    """Single-token decode attention.  q: (B,Hq,D); kv cache: (B,Hkv,Sk,D)."""
+    """Single-token decode attention.  q: (B,Hq,D); kv cache: (B,Hkv,Sk,D).
+
+    ``bk`` (the split-K block over the cache) defaults to the tuning
+    cache's best for this (Sk, D) shape, falling back to the analytic
+    default of 512.
+    """
     if not _use_kernel(mode):
         return ref.ref_decode_attention(q, k, v, length=length, scale=scale)
     b, hq, d = q.shape
     _, hkv, sk, _ = k.shape
     group = hq // hkv
+    if bk is None:
+        from repro.tuning import dispatch
+        bk = dispatch.decode_block(sk, d, q.dtype)
     bk = min(bk, _round_up(sk, 128))
     skp = _round_up(sk, bk)
     kp = jnp.pad(k, ((0, 0), (0, 0), (0, skp - sk), (0, 0)))
@@ -148,12 +188,19 @@ def decode(q: jax.Array, k: jax.Array, v: jax.Array, *,
 
 
 def wkv(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
-        u: jax.Array, *, chunk: int = 128, mode: Mode = "auto"
+        u: jax.Array, *, chunk: Optional[int] = None, mode: Mode = "auto"
         ) -> jax.Array:
-    """WKV6 recurrence.  r/k/v/w: (B, H, T, N); u: (H, N) -> (B, H, T, N)."""
+    """WKV6 recurrence.  r/k/v/w: (B, H, T, N); u: (H, N) -> (B, H, T, N).
+
+    ``chunk`` (the time-axis grid step) defaults to the tuning cache's
+    best for this (T, N) shape, falling back to the analytic 128.
+    """
     if not _use_kernel(mode):
         return ref.ref_wkv(r, k, v, w, u)
     b, h, t, n = r.shape
+    if chunk is None:
+        from repro.tuning import dispatch
+        chunk = dispatch.wkv_chunk(t, n, r.dtype)
     chunk = min(chunk, t)
     pad = (-t) % chunk
     if pad:

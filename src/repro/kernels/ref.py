@@ -17,6 +17,21 @@ _INT_RANGE = {
 }
 
 
+def requantize(acc: jax.Array, out_dtype, scale: float = 1.0) -> jax.Array:
+    """Canonical accumulator -> output conversion: integer accumulators
+    headed for a narrow int dtype are scaled/rounded/clipped; everything
+    else is a plain cast (float GEMMs ignore ``scale``).  The single
+    definition of the repo's requant semantics — gama_gemm and the
+    pack-level GEMM both defer to it so they cannot drift from the
+    oracle."""
+    out_dtype = jnp.dtype(out_dtype)
+    if jnp.issubdtype(acc.dtype, jnp.integer) and out_dtype in _INT_RANGE:
+        lo, hi = _INT_RANGE[out_dtype]
+        return jnp.clip(jnp.round(acc.astype(jnp.float32) * scale),
+                        lo, hi).astype(out_dtype)
+    return acc.astype(out_dtype)
+
+
 def ref_gemm(a: jax.Array, b: jax.Array, *, out_dtype=None,
              scale: float = 1.0) -> jax.Array:
     """Oracle for gama_gemm: int8->int32 accumulate (+requant) / f32."""
@@ -24,13 +39,8 @@ def ref_gemm(a: jax.Array, b: jax.Array, *, out_dtype=None,
     acc_dtype = jnp.int32 if integer else jnp.float32
     if out_dtype is None:
         out_dtype = jnp.int32 if integer else a.dtype
-    out_dtype = jnp.dtype(out_dtype)
     acc = jnp.dot(a, b, preferred_element_type=acc_dtype)
-    if integer and out_dtype in _INT_RANGE:
-        lo, hi = _INT_RANGE[out_dtype]
-        return jnp.clip(jnp.round(acc.astype(jnp.float32) * scale),
-                        lo, hi).astype(out_dtype)
-    return acc.astype(out_dtype)
+    return requantize(acc, out_dtype, scale)
 
 
 def ref_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,

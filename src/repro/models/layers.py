@@ -9,6 +9,7 @@ mathematically identical — see kernels/ops.py).
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Any, Dict, Optional, Sequence, Tuple
 
 import jax
@@ -53,12 +54,27 @@ def shard_hint(x: jax.Array, kind: str) -> jax.Array:
 
 
 def gemm(x: jax.Array, w: jax.Array) -> jax.Array:
-    """x: (..., K) @ w: (K, N) -> (..., N), via the GAMA kernel when on."""
-    if _GEMM_MODE == "ref" or (_GEMM_MODE == "auto" and not kops.on_tpu()):
+    """x: (..., K) @ w: (K, N) -> (..., N), via the GAMA kernel when on.
+
+    With a pack context installed (``repro.distributed.pack_gemm``),
+    GEMMs above its FLOP threshold — in practice the lm head and the
+    ffn projections — route through the pack-level collective matmul
+    even when the Pallas kernel is off (the local per-device GEMMs then
+    use the jnp reference, mode="auto").  The pack context therefore
+    outranks ``set_gemm_mode("ref")`` here: to isolate the pure
+    single-process oracle for numerics debugging, clear the context
+    (``pack_gemm.clear_pack_context()`` / ``engine.close()``) or call
+    ``kernels.ops.matmul(..., mode="ref")`` directly.
+    """
+    rows = math.prod(x.shape[:-1])
+    use_kernel = _GEMM_MODE == "kernel" or (
+        _GEMM_MODE == "auto" and kops.on_tpu())
+    if not use_kernel and not kops.pack_eligible(rows, x.shape[-1],
+                                                 w.shape[-1]):
         return x @ w
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
-    out = kops.matmul(x2, w, mode="kernel")
+    out = kops.matmul(x2, w, mode="kernel" if use_kernel else "auto")
     return out.reshape(*lead, w.shape[-1])
 
 

@@ -27,19 +27,33 @@ class ServeConfig:
     temperature: float = 0.0  # 0 = greedy
     quantize: bool = False    # int8 weight-only (paper multi-precision)
     pretune: bool = True      # resolve tuned kernel configs at init
+    # Pack-level sharding (repro.distributed.pack_gemm): when a mesh is
+    # given, GEMMs above pack_min_flops — the lm head and the ffn
+    # projections — run as pack/array collective matmuls over its model
+    # (and optionally data) axis instead of single kernels.
+    pack_mesh: Any = None
+    pack_data_axis: Optional[str] = None
+    pack_min_flops: float = 2.0 * 1024 ** 3
 
 
 def model_gemm_shapes(cfg: ModelConfig, batch: int, seq: int
                       ) -> List[tuple]:
-    """The (M, K, N) GEMM shapes a forward pass issues, for cache
-    pre-warming: prefill sees M = batch*seq tokens, decode M = batch."""
+    """The (M, K, N) GEMMs a forward pass issues, for cache pre-warming:
+    prefill sees M = batch*seq tokens, decode M = batch.
+
+    This enumerates *GEMM sites*, not unique shapes: swiglu FFNs issue
+    the up and gate projections separately (same (M, K, N) — the second
+    resolves from the memo), so pre-warming walks exactly what the
+    forward pass runs.
+    """
     shapes = []
     qkv_n = (cfg.n_heads + 2 * cfg.n_kv_heads) * cfg.d_head
     for m in (batch * seq, batch):
         shapes += [
             (m, cfg.d_model, qkv_n),                     # fused qkv proj
             (m, cfg.n_heads * cfg.d_head, cfg.d_model),  # out proj
-            (m, cfg.d_model, cfg.d_ff),                  # ffn up/gate
+            (m, cfg.d_model, cfg.d_ff),                  # ffn up
+            (m, cfg.d_model, cfg.d_ff),                  # ffn gate
             (m, cfg.d_ff, cfg.d_model),                  # ffn down
             (m, cfg.d_model, cfg.vocab_size),            # lm head
         ]
@@ -47,6 +61,20 @@ def model_gemm_shapes(cfg: ModelConfig, batch: int, seq: int
 
 
 class ServeEngine:
+    """Slot-batched serving over the tuned kernel + pack dispatch stack.
+
+    ``ServeEngine(cfg, params, ServeConfig(...))`` pre-resolves every
+    GEMM shape's kernel config (so jit tracing never searches), and —
+    when ``ServeConfig.pack_mesh`` is set — installs the pack context
+    that shards the large GEMMs (lm head, ffn) through
+    ``repro.distributed.pack_gemm`` and pre-resolves their pack grids.
+
+    The pack context is *process-global* (it is what ``kernels.ops``
+    dispatches on), so run one packed engine at a time and call
+    :meth:`close` when done with it — otherwise later engines in the
+    same process would trace their GEMMs through this engine's mesh.
+    """
+
     def __init__(self, cfg: ModelConfig, params: Any, scfg: ServeConfig):
         if scfg.quantize:
             from repro.serving.quant import quantize_params
@@ -55,6 +83,26 @@ class ServeEngine:
             self.quant_stats = None
         self.cfg, self.params, self.scfg = cfg, params, scfg
         self.tuned_gemm_hits = 0
+        self.packed_gemms = 0
+        self._pack_ctx = None
+        if scfg.pack_mesh is not None:
+            import repro.distributed.pack_gemm as pg
+            from repro.tuning import dispatch
+            ctx = pg.set_pack_context(scfg.pack_mesh,
+                                      data_axis=scfg.pack_data_axis,
+                                      min_flops=scfg.pack_min_flops)
+            self._pack_ctx = ctx
+            wsize = ctx.mesh.shape[ctx.model_axis]
+            dsize = ctx.mesh.shape[ctx.data_axis] if ctx.data_axis else 1
+            # Pre-resolve the pack grid of every GEMM that will route
+            # through the pack path (cache hit or analytic KCE sweep).
+            for (m, k, n) in model_gemm_shapes(cfg, scfg.batch_slots,
+                                               scfg.max_len):
+                if ctx.eligible(m, k, n):
+                    dispatch.pack_config(m, k, n, cfg.cdtype,
+                                         data_axis=dsize,
+                                         model_axis=wsize)
+                    self.packed_gemms += 1
         if scfg.pretune:
             # Resolve every GEMM shape's kernel config up front (cache
             # hit or analytic fallback) so jit tracing — the hot path —
@@ -70,6 +118,15 @@ class ServeEngine:
             lambda p, b, c: prefill(p, b, cfg, c))
         self._decode = jax.jit(
             lambda p, t, pos, c: decode_step(p, t, pos, cfg, c))
+
+    def close(self) -> None:
+        """Release this engine's pack context (no-op when unpacked or
+        when another engine has since installed its own)."""
+        if self._pack_ctx is not None:
+            import repro.distributed.pack_gemm as pg
+            if pg.get_pack_context() is self._pack_ctx:
+                pg.clear_pack_context()
+            self._pack_ctx = None
 
     def new_cache(self):
         return init_cache(self.cfg, self.scfg.batch_slots,

@@ -5,8 +5,10 @@ GAMA's performance comes from *searching* a constrained design space
 sweep) rather than trusting defaults.  This package turns that static,
 analytic search into an empirical, cached autotuner:
 
-* :mod:`repro.tuning.space` — enumerates the legal Pallas kernel
-  configurations (the design space);
+* :mod:`repro.tuning.space` — enumerates the legal kernel
+  configurations (the design space): GEMM tiles + grid order, attention
+  blocks, the pack-level (P, Q, stagger, reduce) grid, the flash-decode
+  split-K block, and the WKV time-chunk;
 * :mod:`repro.tuning.prior` — ranks candidates with the paper's
   analytic cost model (:mod:`repro.core.gemm_model` /
   :mod:`repro.core.tile_search`) so only the most promising survive
@@ -26,13 +28,19 @@ analytic search into an empirical, cached autotuner:
 
 from repro.tuning.cache import (SCHEMA_VERSION, TuningCache, cache_key,
                                 default_cache_path)
-from repro.tuning.dispatch import (attention_blocks, gemm_config, gemm_tiles,
-                                   reset, set_cache_path, warm_gemm_shapes)
-from repro.tuning.space import AttentionCandidate, DesignSpace, GemmCandidate
+from repro.tuning.dispatch import (attention_blocks, decode_block,
+                                   gemm_config, gemm_tiles, pack_config,
+                                   reset, set_cache_path, warm_gemm_shapes,
+                                   wkv_chunk)
+from repro.tuning.space import (AttentionCandidate, DecodeCandidate,
+                                DesignSpace, GemmCandidate, PackCandidate,
+                                WkvCandidate)
 
 __all__ = [
     "SCHEMA_VERSION", "TuningCache", "cache_key", "default_cache_path",
-    "attention_blocks", "gemm_config", "gemm_tiles", "reset",
-    "set_cache_path", "warm_gemm_shapes",
-    "AttentionCandidate", "DesignSpace", "GemmCandidate",
+    "attention_blocks", "decode_block", "gemm_config", "gemm_tiles",
+    "pack_config", "reset", "set_cache_path", "warm_gemm_shapes",
+    "wkv_chunk",
+    "AttentionCandidate", "DecodeCandidate", "DesignSpace",
+    "GemmCandidate", "PackCandidate", "WkvCandidate",
 ]

@@ -9,6 +9,16 @@ must be re-run per hardware target.
 The file layout is ``{"schema": N, "entries": {key: entry}}``.  A schema
 mismatch (or an unreadable file) invalidates the whole cache rather than
 risking stale configs driving the kernels.
+
+Schema history (see docs/TUNING.md for the full notes):
+
+* **v1** — ops ``gemm`` / ``attention`` / ``sharded_gemm`` (the latter a
+  scalar pack-size G derived analytically).
+* **v2** — ``sharded_gemm`` replaced by ``pack`` (a real, measurable
+  (P, Q, stagger, reduce) grid for ``distributed.pack_gemm``); new ops
+  ``decode`` (flash-decode split-K block ``bk``) and ``wkv`` (time
+  chunk).  v1 files are discarded wholesale on load, per the
+  invalidation policy above.
 """
 
 from __future__ import annotations
@@ -19,7 +29,7 @@ import tempfile
 from pathlib import Path
 from typing import Any, Dict, Optional
 
-SCHEMA_VERSION = 1
+SCHEMA_VERSION = 2
 
 _ENV_VAR = "REPRO_TUNING_CACHE"
 
@@ -36,7 +46,15 @@ def default_cache_path() -> Path:
 def cache_key(op: str, m: int, n: int, k: int, dtype: str, backend: str,
               device_kind: str, extra: str = "") -> str:
     """Canonical key.  ``extra`` carries op-specific context (e.g. mesh
-    shape for sharded GEMM) without widening the common schema."""
+    shape for the pack op) without widening the common schema.  Ops with
+    fewer than three shape dims reuse the slots (documented per op in
+    docs/TUNING.md, e.g. decode stores (Sk, D) as m/n with k=1).
+
+    >>> cache_key("gemm", 512, 256, 128, "bfloat16", "cpu", "cpu")
+    'gemm|m512|n256|k128|bfloat16|cpu|cpu'
+    >>> cache_key("pack", 8, 8, 8, "f32", "cpu", "cpu", extra="mesh2x4")
+    'pack|m8|n8|k8|f32|cpu|cpu|mesh2x4'
+    """
     key = f"{op}|m{m}|n{n}|k{k}|{dtype}|{backend}|{device_kind}"
     return f"{key}|{extra}" if extra else key
 

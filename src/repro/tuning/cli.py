@@ -1,6 +1,6 @@
 """Autotuner CLI — ``python -m repro.tuning.cli {tune,show,clear}``.
 
-Examples::
+Examples (full walkthrough in docs/TUNING.md)::
 
     # Tune one GEMM shape (M,N,K) on this host; second run is a cache hit.
     python -m repro.tuning.cli tune --op gemm --shape 512,512,512 --dtype bf16
@@ -8,9 +8,14 @@ Examples::
     # Tune flash-attention blocks for (Sq, Sk, D).
     python -m repro.tuning.cli tune --op attention --shape 512,512,64
 
-    # Pack-analogue G for a sharded GEMM on a 16x16 mesh.
-    python -m repro.tuning.cli tune --op sharded_gemm \\
-        --shape 65536,16384,7168 --dtype bf16 --mesh 16,16
+    # Pack grid (P x Q, stagger, reduce) for a sharded GEMM on a 2x4
+    # mesh — measured when this host has 8 devices, analytic otherwise.
+    python -m repro.tuning.cli tune --op pack \\
+        --shape 4096,4096,4096 --dtype bf16 --mesh 2,4
+
+    # Flash-decode split-K block for a (Sk, D) cache; WKV chunk for (T, N).
+    python -m repro.tuning.cli tune --op decode --shape 4096,128
+    python -m repro.tuning.cli tune --op wkv --shape 1024,64
 
     # Inspect / wipe the persistent cache.
     python -m repro.tuning.cli show
@@ -60,12 +65,23 @@ def cmd_tune(args) -> int:
         res = dispatch.tune_attention(sq, sk, d, args.dtype, keep=args.keep,
                                       warmup=args.warmup, reps=args.reps,
                                       force=args.force, cache=tc)
-    elif args.op == "sharded_gemm":
+    elif args.op == "pack":
         m, n, k = _parse_shape(args.shape)
         da, ma = _parse_shape(args.mesh, 2)
-        res = dispatch.tune_sharded_gemm(m, k, n, args.dtype, data_axis=da,
-                                         model_axis=ma, force=args.force,
-                                         cache=tc)
+        res = dispatch.tune_pack(m, k, n, args.dtype, data_axis=da,
+                                 model_axis=ma, keep=args.keep,
+                                 warmup=args.warmup, reps=args.reps,
+                                 force=args.force, cache=tc)
+    elif args.op == "decode":
+        sk, d = _parse_shape(args.shape, 2)
+        res = dispatch.tune_decode(sk, d, args.dtype, keep=args.keep,
+                                   warmup=args.warmup, reps=args.reps,
+                                   force=args.force, cache=tc)
+    elif args.op == "wkv":
+        t, n = _parse_shape(args.shape, 2)
+        res = dispatch.tune_wkv(t, n, args.dtype, keep=args.keep,
+                                warmup=args.warmup, reps=args.reps,
+                                force=args.force, cache=tc)
     else:  # pragma: no cover - argparse choices guard this
         raise SystemExit(f"unknown op {args.op!r}")
 
@@ -73,8 +89,9 @@ def cmd_tune(args) -> int:
         cfg = t.get("config")
         us = t.get("us")
         ok = t.get("ok", True)
+        us_s = f"{us:.1f} us" if isinstance(us, (int, float)) else "analytic"
         print(f"  candidate {cfg} -> "
-              f"{us:.1f} us{'' if ok else '  [NUMERICS FAIL]'}")
+              f"{us_s}{'' if ok else '  [NUMERICS FAIL]'}")
     print(res.summary())
     print(f"cache: {tc.path}")
     return 0 if res.best is not None else 1
@@ -120,13 +137,15 @@ def build_parser() -> argparse.ArgumentParser:
     sub = ap.add_subparsers(dest="cmd", required=True)
 
     t = sub.add_parser("tune", help="tune one op/shape and persist the best")
-    t.add_argument("--op", choices=("gemm", "attention", "sharded_gemm"),
+    t.add_argument("--op",
+                   choices=("gemm", "attention", "pack", "decode", "wkv"),
                    default="gemm")
     t.add_argument("--shape", required=True,
-                   help="gemm/sharded_gemm: M,N,K; attention: Sq,Sk,D")
+                   help="gemm/pack: M,N,K; attention: Sq,Sk,D; "
+                        "decode: Sk,D; wkv: T,N")
     t.add_argument("--dtype", default="bf16")
     t.add_argument("--mesh", default="1,1",
-                   help="sharded_gemm: data_axis,model_axis")
+                   help="pack: data_axis,model_axis")
     t.add_argument("--keep", type=int, default=8,
                    help="candidates surviving the analytic prune")
     t.add_argument("--warmup", type=int, default=1)

@@ -20,7 +20,9 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.tuning import prior
 from repro.tuning.cache import TuningCache, cache_key
-from repro.tuning.space import AttentionCandidate, DesignSpace, GemmCandidate
+from repro.tuning.space import (AttentionCandidate, DecodeCandidate,
+                                DesignSpace, GemmCandidate, PackCandidate,
+                                WkvCandidate)
 
 # Canonical dtype spellings accepted by the CLI / config files.
 _DTYPE_ALIASES = {
@@ -30,7 +32,13 @@ _DTYPE_ALIASES = {
 
 
 def canonical_dtype(dtype) -> str:
-    """'bf16' / jnp.bfloat16 / np.dtype -> 'bfloat16'."""
+    """'bf16' / jnp.bfloat16 / np.dtype -> 'bfloat16'.
+
+    >>> canonical_dtype("bf16")
+    'bfloat16'
+    >>> canonical_dtype("float32")
+    'float32'
+    """
     if isinstance(dtype, str):
         return _DTYPE_ALIASES.get(dtype, dtype)
     import numpy as np
@@ -140,6 +148,61 @@ def attention_blocks(sq: int, sk: int, d: int, dtype) -> Tuple[int, int]:
     return blocks
 
 
+def pack_config(m: int, k: int, n: int, dtype, *, data_axis: int = 1,
+                model_axis: int = 1) -> PackCandidate:
+    """Best-known (P, Q, stagger, reduce) pack grid for this shape on a
+    (data_axis, model_axis) mesh.  Cache miss falls back to the analytic
+    prior (the planner's KCE sweep with the staggered-ring schedule)."""
+    dt = canonical_dtype(dtype)
+    backend, kind = backend_fingerprint()
+    key = cache_key("pack", m, n, k, dt, backend, kind,
+                    extra=f"mesh{data_axis}x{model_axis}")
+    hit = _MEMO.get(key)
+    if hit is not None:
+        return hit  # type: ignore[return-value]
+    entry = get_cache().get(key)
+    if entry is not None and "config" in entry:
+        cand = PackCandidate.from_json(entry["config"])
+    else:
+        cand = prior.analytic_pack(m, k, n, data_axis, model_axis)
+    _MEMO[key] = cand
+    return cand
+
+
+def decode_block(sk: int, d: int, dtype) -> int:
+    """Best-known flash-decode split-K block for this (Sk, D) shape."""
+    dt = canonical_dtype(dtype)
+    backend, kind = backend_fingerprint()
+    key = cache_key("decode", sk, d, 1, dt, backend, kind)
+    hit = _MEMO.get(key)
+    if hit is not None:
+        return hit  # type: ignore[return-value]
+    entry = get_cache().get(key)
+    if entry is not None and "config" in entry:
+        bk = DecodeCandidate.from_json(entry["config"]).bk
+    else:
+        bk = prior.analytic_decode(sk, d).bk
+    _MEMO[key] = bk
+    return bk
+
+
+def wkv_chunk(t: int, n: int, dtype) -> int:
+    """Best-known WKV6 time-chunk for this (T, N) shape."""
+    dt = canonical_dtype(dtype)
+    backend, kind = backend_fingerprint()
+    key = cache_key("wkv", t, n, 1, dt, backend, kind)
+    hit = _MEMO.get(key)
+    if hit is not None:
+        return hit  # type: ignore[return-value]
+    entry = get_cache().get(key)
+    if entry is not None and "config" in entry:
+        chunk = WkvCandidate.from_json(entry["config"]).chunk
+    else:
+        chunk = prior.analytic_wkv(t, n).chunk
+    _MEMO[key] = chunk
+    return chunk
+
+
 def warm_gemm_shapes(shapes: Sequence[Tuple[int, int, int]], dtype) -> int:
     """Pre-resolve configs for a model's GEMM shapes (serving startup) so
     the first jit trace never touches disk or runs the analytic search.
@@ -169,6 +232,8 @@ class TuneResult:
             return f"cache hit: {self.key} -> {self.best}"
         if self.best is None:
             return f"tuning failed: no candidate passed numerics ({self.key})"
+        if self.best_us is None:
+            return f"tuned {self.key} -> {self.best} (analytic, unmeasured)"
         return (f"tuned {self.key} -> {self.best} "
                 f"({self.best_us:.1f} us, {len(self.trials)} measured)")
 
@@ -272,32 +337,95 @@ def tune_attention(sq: int, sk: int, d: int, dtype="float32", *,
         space_size=len(space))
 
 
-def tune_sharded_gemm(m: int, k: int, n: int, dtype, *, data_axis: int,
-                      model_axis: int, force: bool = False,
-                      cache: Optional[TuningCache] = None) -> TuneResult:
-    """Pack-analogue G for a sharded GEMM — analytic (the planner's KCE
-    sweep, Fig. 6); there is no single-host measurement for a multi-chip
-    cascade, so the prior *is* the stored answer, re-derived per mesh."""
+def tune_pack(m: int, k: int, n: int, dtype, *, data_axis: int = 1,
+              model_axis: int = 1, keep: int = 6, warmup: int = 1,
+              reps: int = 3, force: bool = False,
+              cache: Optional[TuningCache] = None) -> TuneResult:
+    """Tune the pack-level grid (P x Q, stagger, reduce order) for a
+    sharded GEMM — schema v2's replacement for the v1 scalar G.
+
+    When this host exposes enough devices (a real slice, or a CPU mesh
+    simulated via ``--xla_force_host_platform_device_count``), survivors
+    of the analytic prune are *measured* end-to-end through
+    ``pack_gemm`` on a live (data_axis, model_axis) mesh.  Otherwise the
+    analytic prior is stored directly (flagged ``analytic``), exactly as
+    re-deriving the planner's KCE sweep per mesh."""
+    import jax
+
+    from repro.launch.mesh import compat_make_mesh
     dt = canonical_dtype(dtype)
     backend, kind = backend_fingerprint()
-    key = cache_key("sharded_gemm", m, n, k, dt, backend, kind,
+    key = cache_key("pack", m, n, k, dt, backend, kind,
                     extra=f"mesh{data_axis}x{model_axis}")
     tc = cache if cache is not None else get_cache()
     hit = _cached_result(key, tc, force)
     if hit is not None:
         return hit
-    best = prior.analytic_cascade_g(m, k, n, data_axis, model_axis)
-    config = {"g": best["g"], "x": best["x"]}
-    entry = {
-        "config": config,
-        "us": best["step_s"] * 1e6,
-        "analytic": True,
-        "gamma": best["gamma"],
-        "tuned_at": _now(),
-    }
-    tc.put(key, entry)
-    tc.save()
-    _MEMO.pop(key, None)
-    return TuneResult(key=key, best=config, best_us=entry["us"],
-                      cache_hit=False,
-                      trials=[{"config": config, **entry}])
+    space = DesignSpace.pack(m, k, n, model_axis)
+    if len(jax.devices()) < data_axis * model_axis:
+        best = prior.analytic_pack(m, k, n, data_axis, model_axis)
+        entry = {
+            "config": best.to_json(),
+            "analytic": True,
+            "space_size": len(space),
+            "measured": 0,
+            "tuned_at": _now(),
+        }
+        tc.put(key, entry)
+        tc.save()
+        _MEMO.pop(key, None)
+        return TuneResult(key=key, best=entry["config"], best_us=None,
+                          cache_hit=False,
+                          trials=[{"config": entry["config"],
+                                   "analytic": True}])
+    from repro.tuning import runner
+    survivors = prior.prune_pack(space, m, k, n, data_axis, model_axis,
+                                 keep=keep)
+    mesh = compat_make_mesh((data_axis, model_axis), ("data", "model"))
+    da = "data" if data_axis > 1 else None
+    return _measure_and_store(
+        key, tc, survivors,
+        lambda c: runner.time_pack(c, m, k, n, dt, mesh, data_axis=da,
+                                   warmup=warmup, reps=reps),
+        space_size=len(space))
+
+
+def tune_decode(sk: int, d: int, dtype="float32", *, keep: int = 4,
+                warmup: int = 1, reps: int = 3, force: bool = False,
+                cache: Optional[TuningCache] = None) -> TuneResult:
+    """Tune the flash-decode split-K block ``bk`` for a (Sk, D) cache."""
+    from repro.tuning import runner
+    dt = canonical_dtype(dtype)
+    backend, kind = backend_fingerprint()
+    key = cache_key("decode", sk, d, 1, dt, backend, kind)
+    tc = cache if cache is not None else get_cache()
+    hit = _cached_result(key, tc, force)
+    if hit is not None:
+        return hit
+    space = DesignSpace.decode(sk, d)
+    survivors = prior.prune_decode(space, sk, d, keep=keep)
+    return _measure_and_store(
+        key, tc, survivors,
+        lambda c: runner.time_decode(c, sk, d, dt, warmup=warmup,
+                                     reps=reps),
+        space_size=len(space))
+
+
+def tune_wkv(t: int, n: int, dtype="float32", *, keep: int = 4,
+             warmup: int = 1, reps: int = 3, force: bool = False,
+             cache: Optional[TuningCache] = None) -> TuneResult:
+    """Tune the WKV6 time-chunk for a (T, N) recurrence."""
+    from repro.tuning import runner
+    dt = canonical_dtype(dtype)
+    backend, kind = backend_fingerprint()
+    key = cache_key("wkv", t, n, 1, dt, backend, kind)
+    tc = cache if cache is not None else get_cache()
+    hit = _cached_result(key, tc, force)
+    if hit is not None:
+        return hit
+    space = DesignSpace.wkv(t, n)
+    survivors = prior.prune_wkv(space, t, n, keep=keep)
+    return _measure_and_store(
+        key, tc, survivors,
+        lambda c: runner.time_wkv(c, t, n, dt, warmup=warmup, reps=reps),
+        space_size=len(space))

@@ -15,7 +15,9 @@ from typing import List, Sequence, Tuple
 from repro.core import hw
 from repro.core.tile_search import (search_tpu_tiles, tile_gamma,
                                     tile_vmem_bytes)
-from repro.tuning.space import AttentionCandidate, DesignSpace, GemmCandidate
+from repro.tuning.space import (AttentionCandidate, DecodeCandidate,
+                                DesignSpace, GemmCandidate, PackCandidate,
+                                WkvCandidate)
 
 
 def precision_for(dtype_name: str) -> hw.Precision:
@@ -98,12 +100,94 @@ def analytic_attention(sq: int, sk: int, d: int) -> AttentionCandidate:
     return AttentionCandidate(bq=128, bk=128)
 
 
-def analytic_cascade_g(m: int, k: int, n: int, data_axis: int,
-                       model_axis: int) -> dict:
-    """Pack-analogue prior for sharded GEMM: the planner's KCE sweep."""
+# ---------------------------------------------------------------------------
+# Pack level (P x Q grid + stagger + reduce order)
+# ---------------------------------------------------------------------------
+
+
+def _cascade_steps(m: int, k: int, n: int, data_axis: int,
+                   model_axis: int) -> dict:
+    """step_s per cascade depth P, from the planner's KCE sweep (Fig. 6).
+    P plays the paper's G (K shards), Q = model_axis / P plays X."""
     from repro.core import planner
     site = planner.GemmSite("tuned", m=m, k=k, n=n)
     choices = planner.plan_cascade(site, data_axis, model_axis)
-    best = min(choices, key=lambda c: c.step_s)
-    return {"g": best.g, "x": best.x, "step_s": best.step_s,
-            "gamma": best.gamma}
+    return {c.g: c for c in choices}
+
+
+def pack_score(c: PackCandidate, steps: dict) -> Tuple:
+    """Sort key, higher = better.  Primary: the planner's modeled step
+    time for this cascade depth.  Schedule tiebreak: for P > 1 prefer the
+    staggered ring (offset 1 — adjacent columns shifted by one chunk, the
+    Fig. 7 skew the paper lands on); P == 1 has no reduce, keep psum."""
+    step = steps[c.p].step_s
+    if c.p == 1:
+        sched = 1 if (c.reduce == "psum" and c.stagger == 0) else 0
+    else:
+        sched = (2 if c.reduce == "ring" else 0) \
+            + (1 if c.stagger == 1 else 0)
+    return (-round(step * 1e9), sched)
+
+
+def prune_pack(candidates: Sequence[PackCandidate], m: int, k: int, n: int,
+               data_axis: int, model_axis: int,
+               keep: int = 6) -> List[PackCandidate]:
+    steps = _cascade_steps(m, k, n, data_axis, model_axis)
+    ranked = sorted(candidates, key=lambda c: pack_score(c, steps),
+                    reverse=True)
+    return ranked[:max(1, keep)]
+
+
+def analytic_pack(m: int, k: int, n: int, data_axis: int,
+                  model_axis: int) -> PackCandidate:
+    """Cache-miss fallback: the planner's best (G, X) factoring with the
+    staggered-ring schedule (offset 1) whenever there is a reduce."""
+    steps = _cascade_steps(m, k, n, data_axis, model_axis)
+    best = min(steps.values(), key=lambda c: c.step_s)
+    if best.g == 1:
+        return PackCandidate(p=1, q=best.x, stagger=0, reduce="psum")
+    return PackCandidate(p=best.g, q=best.x, stagger=1, reduce="ring")
+
+
+# ---------------------------------------------------------------------------
+# Flash decode (split-K block) and WKV (time chunk)
+# ---------------------------------------------------------------------------
+
+
+def decode_score(c: DecodeCandidate, sk: int, d: int) -> Tuple:
+    """Fewer grid steps over the cache first (each step re-reads the
+    online-softmax state), then less padding waste, then larger bk."""
+    steps = -(-max(sk, 1) // c.bk)
+    waste = (-sk) % c.bk
+    return (-steps, -waste, c.bk)
+
+
+def prune_decode(candidates: Sequence[DecodeCandidate], sk: int, d: int,
+                 keep: int = 4) -> List[DecodeCandidate]:
+    ranked = sorted(candidates, key=lambda c: decode_score(c, sk, d),
+                    reverse=True)
+    return ranked[:max(1, keep)]
+
+
+def analytic_decode(sk: int, d: int) -> DecodeCandidate:
+    """Cache-miss fallback: the seed kernel's default split-K block."""
+    return DecodeCandidate(bk=512)
+
+
+def wkv_score(c: WkvCandidate, t: int, n: int) -> Tuple:
+    """Less time-padding first (pad steps are wasted recurrence work),
+    then larger chunks (fewer grid steps re-entering the kernel)."""
+    waste = (-t) % c.chunk
+    return (-waste, c.chunk)
+
+
+def prune_wkv(candidates: Sequence[WkvCandidate], t: int, n: int,
+              keep: int = 4) -> List[WkvCandidate]:
+    ranked = sorted(candidates, key=lambda c: wkv_score(c, t, n),
+                    reverse=True)
+    return ranked[:max(1, keep)]
+
+
+def analytic_wkv(t: int, n: int) -> WkvCandidate:
+    """Cache-miss fallback: the seed kernel's default chunk."""
+    return WkvCandidate(chunk=128)

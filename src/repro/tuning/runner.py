@@ -16,7 +16,8 @@ from typing import Callable, List, Optional
 
 import numpy as np
 
-from repro.tuning.space import AttentionCandidate, GemmCandidate
+from repro.tuning.space import (AttentionCandidate, DecodeCandidate,
+                                GemmCandidate, PackCandidate, WkvCandidate)
 
 
 @dataclasses.dataclass
@@ -89,8 +90,10 @@ def time_gemm(cand: GemmCandidate, m: int, k: int, n: int, dtype_name: str,
     tiles = (cand.tm, cand.tk, cand.tn)
 
     def run():
+        # allow_pack=False: this probe measures the *single-kernel* level
+        # even if a pack context is installed in the process.
         return np.asarray(ops.matmul(a, b, tiles=tiles, order=cand.order,
-                                     mode="kernel"))
+                                     mode="kernel", allow_pack=False))
 
     samples = measure_fn(run, warmup=warmup, reps=reps)
     got = run()
@@ -124,6 +127,89 @@ def time_attention(cand: AttentionCandidate, sq: int, sk: int, d: int,
     samples = measure_fn(run, warmup=warmup, reps=reps)
     got = run()
     want = np.asarray(ref.ref_attention(q, k, v))
+    err = float(np.max(np.abs(got.astype(np.float64)
+                              - want.astype(np.float64))))
+    return Measurement(us=robust_us(samples), samples_us=samples,
+                       max_err=err, ok=err <= atol)
+
+
+def time_pack(cand: PackCandidate, m: int, k: int, n: int,
+              dtype_name: str, mesh, data_axis: Optional[str] = None,
+              warmup: int = 1, reps: int = 3,
+              rtol: float = 2e-2) -> Measurement:
+    """Time one pack-level candidate on a live mesh (the simulated
+    multi-device CPU mesh in tests/CI; real devices in production).
+    Local GEMMs run mode="auto" — exactly what dispatch will serve."""
+    import repro.distributed.pack_gemm as pg
+    from repro.kernels import ref
+    a, b = _probe_arrays(m, k, n, dtype_name)
+
+    def run():
+        return np.asarray(pg.pack_gemm(
+            a, b, mesh, p=cand.p, q=cand.q, stagger=cand.stagger,
+            reduce=cand.reduce, data_axis=data_axis, mode="auto"))
+
+    samples = measure_fn(run, warmup=warmup, reps=reps)
+    got = run()
+    want = np.asarray(ref.ref_gemm(a, b))
+    err = float(np.max(np.abs(got.astype(np.float64)
+                              - want.astype(np.float64))))
+    scale = float(np.max(np.abs(want)) or 1.0)
+    return Measurement(us=robust_us(samples), samples_us=samples,
+                       max_err=err, ok=err <= rtol * scale)
+
+
+def time_decode(cand: DecodeCandidate, sk: int, d: int,
+                dtype_name: str = "float32", b: int = 1, hq: int = 4,
+                hkv: int = 2, warmup: int = 1, reps: int = 3,
+                atol: float = 5e-2) -> Measurement:
+    """Time one flash-decode split-K block through ops.decode."""
+    import jax.numpy as jnp
+
+    from repro.kernels import ops, ref
+    rng = np.random.default_rng(0)
+    dt = jnp.dtype(dtype_name)
+    q = jnp.asarray(rng.normal(size=(b, hq, d)), dt)
+    k = jnp.asarray(rng.normal(size=(b, hkv, sk, d)), dt)
+    v = jnp.asarray(rng.normal(size=(b, hkv, sk, d)), dt)
+    lengths = jnp.full((b,), sk, jnp.int32)
+
+    def run():
+        return np.asarray(ops.decode(q, k, v, length=lengths, bk=cand.bk,
+                                     mode="kernel"))
+
+    samples = measure_fn(run, warmup=warmup, reps=reps)
+    got = run()
+    want = np.asarray(ref.ref_decode_attention(q, k, v, length=lengths))
+    err = float(np.max(np.abs(got.astype(np.float64)
+                              - want.astype(np.float64))))
+    return Measurement(us=robust_us(samples), samples_us=samples,
+                       max_err=err, ok=err <= atol)
+
+
+def time_wkv(cand: WkvCandidate, t: int, n: int,
+             dtype_name: str = "float32", b: int = 1, h: int = 2,
+             warmup: int = 1, reps: int = 3,
+             atol: float = 5e-2) -> Measurement:
+    """Time one WKV6 time-chunk through ops.wkv."""
+    import jax.numpy as jnp
+
+    from repro.kernels import ops, ref
+    rng = np.random.default_rng(0)
+    dt = jnp.dtype(dtype_name)
+    r = jnp.asarray(rng.normal(size=(b, h, t, n)) * 0.5, dt)
+    k = jnp.asarray(rng.normal(size=(b, h, t, n)) * 0.5, dt)
+    v = jnp.asarray(rng.normal(size=(b, h, t, n)) * 0.5, dt)
+    w = jnp.asarray(rng.uniform(0.5, 1.0, size=(b, h, t, n)), dt)
+    u = jnp.asarray(rng.normal(size=(h, n)) * 0.5, dt)
+
+    def run():
+        return np.asarray(ops.wkv(r, k, v, w, u, chunk=cand.chunk,
+                                  mode="kernel"))
+
+    samples = measure_fn(run, warmup=warmup, reps=reps)
+    got = run()
+    want = np.asarray(ref.ref_wkv(r, k, v, w, u))
     err = float(np.max(np.abs(got.astype(np.float64)
                               - want.astype(np.float64))))
     return Measurement(us=robust_us(samples), samples_us=samples,

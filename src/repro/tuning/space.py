@@ -4,9 +4,16 @@ The GEMM space mirrors the paper's Eq. 6 search structure on the TPU:
 MXU-aligned (tm, tk, tn) BlockSpec tiles that fit the VMEM budget under
 Pallas double buffering, crossed with the grid traversal order (which of
 M/N is outermost — the analogue of choosing which operand stays resident
-across revisits) and the accumulator dtype (cascade payload width).  The
-pack-analogue G for sharded GEMM comes from the planner's KCE sweep
-divisors (paper Fig. 6).
+across revisits) and the accumulator dtype (cascade payload width).
+
+The pack space covers the paper's pack/array levels for the sharded
+GEMM (``distributed.pack_gemm``): the (P, Q) factorization of the model
+axis (P = cascade depth over K, Q = N columns — the Fig. 6 KCE sweep),
+the stagger offset of the ring-reduce schedule (Fig. 7's staggered
+placement), and the reduce order (staggered ring vs. plain psum).
+
+Decode attention tunes its split-K block ``bk`` over the KV cache, and
+WKV its time-chunk — the two non-GEMM grid knobs the ROADMAP called out.
 """
 
 from __future__ import annotations
@@ -25,14 +32,13 @@ GEMM_ORDERS = ("mn", "nm")
 
 @dataclasses.dataclass(frozen=True)
 class GemmCandidate:
-    """One point of the GEMM design space."""
+    """One point of the (single-kernel) GEMM design space."""
 
     tm: int
     tk: int
     tn: int
     order: str = "mn"          # grid traversal, see GEMM_ORDERS
     acc: str = "f32"           # accumulator dtype ("f32" floats, "i32" ints)
-    g: int = 1                 # pack-analogue for sharded GEMM (1 = local)
 
     def to_json(self) -> dict:
         return dataclasses.asdict(self)
@@ -41,7 +47,55 @@ class GemmCandidate:
     def from_json(cls, d: dict) -> "GemmCandidate":
         return cls(tm=int(d["tm"]), tk=int(d["tk"]), tn=int(d["tn"]),
                    order=str(d.get("order", "mn")),
-                   acc=str(d.get("acc", "f32")), g=int(d.get("g", 1)))
+                   acc=str(d.get("acc", "f32")))
+
+
+@dataclasses.dataclass(frozen=True)
+class PackCandidate:
+    """One point of the pack-level design space (schema v2; replaces the
+    v1 scalar pack-size G)."""
+
+    p: int                     # cascade depth: K shards per pack column
+    q: int                     # pack columns: N shards (p * q = |model|)
+    stagger: int = 1           # ring-schedule offset per column (Fig. 7)
+    reduce: str = "ring"       # "ring" (staggered) | "psum" (baseline)
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_json(cls, d: dict) -> "PackCandidate":
+        return cls(p=int(d["p"]), q=int(d["q"]),
+                   stagger=int(d.get("stagger", 0)),
+                   reduce=str(d.get("reduce", "psum")))
+
+
+@dataclasses.dataclass(frozen=True)
+class DecodeCandidate:
+    """Split-K block over the KV cache for flash decode."""
+
+    bk: int
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_json(cls, d: dict) -> "DecodeCandidate":
+        return cls(bk=int(d["bk"]))
+
+
+@dataclasses.dataclass(frozen=True)
+class WkvCandidate:
+    """Time-axis chunk for the WKV6 recurrence kernel."""
+
+    chunk: int
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_json(cls, d: dict) -> "WkvCandidate":
+        return cls(chunk=int(d["chunk"]))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -124,11 +178,58 @@ class DesignSpace:
                 out.append(AttentionCandidate(bq=bq, bk=bk))
         return out or [AttentionCandidate(bq=128, bk=128)]
 
+    DECODE_BLOCKS: Sequence[int] = (128, 256, 512, 1024, 2048)
+    WKV_CHUNKS: Sequence[int] = (16, 32, 64, 128, 256)
+
     @classmethod
-    def cascade_g(cls, data_axis: int, model_axis: int) -> List[int]:
-        """Pack-size candidates for sharded GEMM: divisors of the model
-        axis, as in the paper's Fig. 6 KCE sweep (G x X = model_axis)."""
-        return [g for g in range(1, model_axis + 1) if model_axis % g == 0]
+    def pack(cls, m: int, k: int, n: int,
+             model_axis: int) -> List["PackCandidate"]:
+        """Pack-level candidates: every (P, Q) factorization of the model
+        axis (the Fig. 6 KCE sweep), crossed with the stagger offset and
+        the reduce order.  P = 1 has no cross-device reduce, so only the
+        trivial schedule survives there.
+
+        >>> [(c.p, c.q) for c in DesignSpace.pack(512, 512, 512, 4)
+        ...  if c.reduce == "psum" and c.stagger == 0]
+        [(1, 4), (2, 2), (4, 1)]
+        """
+        out: List[PackCandidate] = []
+        for p in range(1, model_axis + 1):
+            if model_axis % p:
+                continue
+            q = model_axis // p
+            if p == 1:
+                out.append(PackCandidate(p=1, q=q, stagger=0,
+                                         reduce="psum"))
+                continue
+            staggers = sorted({0, 1, p // 2})
+            for stagger in staggers:
+                out.append(PackCandidate(p=p, q=q, stagger=stagger,
+                                         reduce="ring"))
+            out.append(PackCandidate(p=p, q=q, stagger=0, reduce="psum"))
+        return out
+
+    @classmethod
+    def decode(cls, sk: int, d: int) -> List["DecodeCandidate"]:
+        """Split-K blocks for flash decode: lane-aligned, no larger than
+        the (aligned) cache — bigger would clamp to a duplicate.  Always
+        includes the *effective* untuned block (the analytic 512 after
+        ops.decode's clamp), so tuning can never regress below the
+        fallback."""
+        bk_max = max(_round_up(sk, 128), cls.DECODE_BLOCKS[0])
+        blocks = {bk for bk in cls.DECODE_BLOCKS if bk <= bk_max}
+        blocks.add(min(512, bk_max))
+        return [DecodeCandidate(bk=bk) for bk in sorted(blocks)]
+
+    @classmethod
+    def wkv(cls, t: int, n: int) -> List["WkvCandidate"]:
+        """Time chunks for WKV6: at most the (padded) sequence length.
+        Always includes the effective untuned chunk (the analytic 128
+        after ops.wkv's min(chunk, T) clamp)."""
+        chunks = {c for c in cls.WKV_CHUNKS
+                  if c <= max(t, cls.WKV_CHUNKS[0])}
+        chunks.add(min(128, max(t, 1)))
+        return [WkvCandidate(chunk=c) for c in sorted(chunks)]
 
 
 def gemm_shape_key(m: int, k: int, n: int) -> Tuple[int, int, int]:

@@ -1,0 +1,174 @@
+"""Pack/array-level GEMM correctness on a simulated 8-device mesh
+(tests/test_pack_gemm.py drives this in a subprocess; the device-count
+flag must be set before jax initializes)."""
+
+import os
+import tempfile
+
+# Append to (not overwrite) any caller-provided XLA flags; an explicit
+# device-count flag from the environment wins.
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = (
+        _flags + " --xla_force_host_platform_device_count=8").strip()
+os.environ["REPRO_TUNING_CACHE"] = os.path.join(
+    tempfile.mkdtemp(prefix="repro_pack_test_"), "tuning_cache.json")
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+import repro.distributed.pack_gemm as pg  # noqa: E402
+from repro.kernels import ops, ref  # noqa: E402
+from repro.launch.mesh import compat_make_mesh  # noqa: E402
+
+
+def check_pack_numerics():
+    """pack_gemm vs the jnp oracle across (P, Q) grids, stagger offsets
+    and reduce orders, on divisible and deliberately awkward shapes."""
+    rng = np.random.default_rng(0)
+    mesh = compat_make_mesh((1, 8), ("data", "model"))
+    shapes = [(16, 32, 24),     # divisible everywhere
+              (13, 100, 27)]    # M/K/N all non-divisible by any grid
+    configs = [(1, 8, 0, "psum"), (2, 4, 0, "psum"), (2, 4, 0, "ring"),
+               (2, 4, 1, "ring"), (4, 2, 1, "ring"), (4, 2, 3, "ring"),
+               (8, 1, 1, "ring")]
+    for (m, k, n) in shapes:
+        a = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+        b = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+        want = np.asarray(ref.ref_gemm(a, b))
+        for (p, q, stagger, red) in configs:
+            got = np.asarray(pg.pack_gemm(a, b, mesh, p=p, q=q,
+                                          stagger=stagger, reduce=red))
+            err = float(np.max(np.abs(got - want)))
+            assert err < 1e-4, (m, k, n, p, q, stagger, red, err)
+    # bf16 in, bf16 out (f32 accumulation inside the pack).
+    a = jnp.asarray(rng.normal(size=(16, 64)), jnp.bfloat16)
+    b = jnp.asarray(rng.normal(size=(64, 24)), jnp.bfloat16)
+    got = np.asarray(pg.pack_gemm(a, b, mesh, p=2, q=4, stagger=1,
+                                  reduce="ring").astype(jnp.float32))
+    want = np.asarray(ref.ref_gemm(a, b).astype(jnp.float32))
+    assert float(np.max(np.abs(got - want))) < 0.2
+    print("pack numerics OK")
+
+
+def check_pack_int8():
+    """int8 requantizes once after the full reduction — exact match."""
+    rng = np.random.default_rng(1)
+    mesh = compat_make_mesh((1, 8), ("data", "model"))
+    ai = jnp.asarray(rng.integers(-128, 128, size=(16, 96)), jnp.int8)
+    bi = jnp.asarray(rng.integers(-128, 128, size=(96, 24)), jnp.int8)
+    want = np.asarray(ref.ref_gemm(ai, bi, out_dtype=jnp.int8,
+                                   scale=0.002))
+    got = np.asarray(pg.pack_gemm(ai, bi, mesh, p=4, q=2, stagger=1,
+                                  reduce="ring", out_dtype=jnp.int8,
+                                  scale=0.002))
+    assert (got == want).all()
+    print("pack int8 OK")
+
+
+def check_array_level():
+    """array_gemm: M sharded over data, packs over model; edge shapes."""
+    rng = np.random.default_rng(2)
+    mesh = compat_make_mesh((2, 4), ("data", "model"))
+    for (m, k, n) in [(16, 32, 24), (13, 100, 27)]:
+        a = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+        b = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+        want = np.asarray(ref.ref_gemm(a, b))
+        for (p, q) in [(1, 4), (2, 2), (4, 1)]:
+            got = np.asarray(pg.array_gemm(
+                a, b, mesh, p=p, q=q, stagger=1,
+                reduce="ring" if p > 1 else "psum"))
+            err = float(np.max(np.abs(got - want)))
+            assert err < 1e-4, (m, k, n, p, q, err)
+    print("array level OK")
+
+
+def check_ops_dispatch():
+    """ops.matmul routes through the pack above the context threshold
+    and stays single-kernel below it / without a context."""
+    rng = np.random.default_rng(3)
+    mesh = compat_make_mesh((1, 8), ("data", "model"))
+    a = jnp.asarray(rng.normal(size=(32, 64)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(64, 48)), jnp.float32)
+    want = np.asarray(ref.ref_gemm(a, b))
+    with pg.pack_context(mesh, min_flops=0):
+        assert ops.pack_eligible(32, 64, 48)
+        got = np.asarray(ops.matmul(a, b))
+        # mode="ref" stays the pure single-process oracle.
+        got_ref = np.asarray(ops.matmul(a, b, mode="ref"))
+    assert not ops.pack_eligible(32, 64, 48)
+    assert float(np.max(np.abs(got - want))) < 1e-4
+    assert float(np.max(np.abs(got_ref - want))) == 0.0
+    with pg.pack_context(mesh, min_flops=1e18):
+        assert not ops.pack_eligible(32, 64, 48)  # below threshold
+    print("ops dispatch OK")
+
+
+def check_engine_pack():
+    """ServeEngine with pack_mesh: lm-head/ffn GEMMs shard through
+    packs; prefill logits match the unpacked engine and generation runs."""
+    from repro.models import ModelConfig, init_cache, init_params, prefill
+    from repro.serving.engine import ServeConfig, ServeEngine
+
+    cfg = ModelConfig(name="t", n_layers=2, d_model=64, n_heads=4,
+                      n_kv_heads=2, d_head=16, d_ff=128, vocab_size=256,
+                      compute_dtype="float32", cache_dtype="float32")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    mesh = compat_make_mesh((1, 8), ("data", "model"))
+    rng = np.random.default_rng(4)
+    prompts = rng.integers(0, 256, size=(2, 16)).astype(np.int32)
+    batch = {"tokens": jnp.asarray(prompts)}
+
+    # Reference logits: no pack context.
+    caches = init_cache(cfg, 2, 32)
+    logits_ref, _ = prefill(params, batch, cfg, caches)
+
+    # lm head at prefill is (2*16, 64, 256): 2*32*64*256 FLOPs ~ 1.05e6.
+    scfg = ServeConfig(batch_slots=2, max_len=32, pack_mesh=mesh,
+                       pack_min_flops=1e6)
+    engine = ServeEngine(cfg, params, scfg)
+    try:
+        assert engine.packed_gemms > 0, "no GEMM cleared the pack threshold"
+        assert pg.get_pack_context() is not None
+        caches = engine.new_cache()
+        logits_pack, _ = engine._prefill(engine.params, batch, caches)
+        err = float(jnp.max(jnp.abs(logits_pack - logits_ref)))
+        assert err < 1e-3, err
+        out = engine.generate(prompts, max_new=3)
+        assert out.shape == (2, 3)
+    finally:
+        engine.close()
+    assert pg.get_pack_context() is None, "close() must release the context"
+    print("engine pack OK")
+
+
+def check_tune_pack_measured():
+    """tune_pack measures survivors on the live mesh and dispatch then
+    serves the tuned grid from the cache."""
+    from repro.tuning import dispatch
+
+    res = dispatch.tune_pack(16, 32, 24, "float32", data_axis=2,
+                             model_axis=4, keep=3, warmup=0, reps=1)
+    assert not res.cache_hit and res.best is not None
+    assert len(res.trials) == 3
+    assert all("us" in t for t in res.trials), "expected measured trials"
+    cand = dispatch.pack_config(16, 32, 24, jnp.float32, data_axis=2,
+                                model_axis=4)
+    assert (cand.p, cand.q, cand.stagger, cand.reduce) == (
+        res.best["p"], res.best["q"], res.best["stagger"],
+        res.best["reduce"])
+    res2 = dispatch.tune_pack(16, 32, 24, "float32", data_axis=2,
+                              model_axis=4)
+    assert res2.cache_hit
+    print("tune pack measured OK")
+
+
+if __name__ == "__main__":
+    check_pack_numerics()
+    check_pack_int8()
+    check_array_level()
+    check_ops_dispatch()
+    check_engine_pack()
+    check_tune_pack_measured()
+    print("ALL PACK OK")

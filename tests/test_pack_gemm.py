@@ -1,0 +1,190 @@
+"""Pack/array-level GEMM: multi-device numerics run in a subprocess
+(the 8-device host-platform flag must precede jax init), plus
+single-process unit tests for the pack geometry, the tuner's pack /
+decode / wkv tunables, and the serving-engine shape enumeration."""
+
+import os
+import subprocess
+import sys
+
+import jax.numpy as jnp
+import pytest
+
+import repro.distributed.pack_gemm as pg
+from repro.tuning import dispatch, prior
+from repro.tuning.space import (DecodeCandidate, DesignSpace,
+                                PackCandidate, WkvCandidate)
+from repro.tuning.cache import cache_key
+
+
+def test_multidevice_pack_suite():
+    """pack_gemm/array_gemm vs the reference GEMM on an 8-device mesh
+    (non-divisible M/N/K, int8 exactness, ops dispatch, engine packing,
+    measured pack tuning)."""
+    script = os.path.join(os.path.dirname(__file__), "_pack_gemm_cases.py")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+    res = subprocess.run([sys.executable, script], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert res.returncode == 0, res.stdout + "\n" + res.stderr
+    assert "ALL PACK OK" in res.stdout
+
+
+@pytest.fixture
+def tuning_cache(tmp_path):
+    path = tmp_path / "tuning_cache.json"
+    dispatch.set_cache_path(path)
+    yield path
+    dispatch.reset()
+
+
+class TestPackGeometry:
+    def test_pack_coords_layout(self):
+        # m = qi * p + j: column members are contiguous on the axis.
+        assert pg.pack_coords(4, 2) == [(0, 0), (0, 1), (1, 0), (1, 1)]
+
+    def test_block_cyclic_spreads_tail(self):
+        idx = pg.block_cyclic_index(2, 3)
+        assert idx.tolist() == [[0, 2, 4], [1, 3, 5]]
+        # Every block owned exactly once.
+        assert sorted(idx.reshape(-1).tolist()) == list(range(6))
+
+    def test_context_threshold(self):
+        ctx = pg.PackContext(mesh=None, min_flops=1000.0)
+        assert ctx.eligible(10, 10, 10)      # 2000 flops
+        assert not ctx.eligible(5, 10, 5)    # 500 flops
+
+
+class TestPackSpace:
+    def test_pack_space_factorizations(self):
+        cands = DesignSpace.pack(512, 512, 512, 8)
+        grids = {(c.p, c.q) for c in cands}
+        assert grids == {(1, 8), (2, 4), (4, 2), (8, 1)}
+        for c in cands:
+            assert c.p * c.q == 8
+            assert c.reduce in ("ring", "psum")
+            if c.p == 1:
+                assert c.reduce == "psum" and c.stagger == 0
+            else:
+                assert 0 <= c.stagger < c.p
+
+    def test_pack_prune_prefers_staggered_ring(self):
+        cands = DesignSpace.pack(4096, 4096, 4096, 8)
+        kept = prior.prune_pack(cands, 4096, 4096, 4096, 1, 8, keep=3)
+        best = kept[0]
+        fallback = prior.analytic_pack(4096, 4096, 4096, 1, 8)
+        assert (best.p, best.q) == (fallback.p, fallback.q)
+        if best.p > 1:
+            assert best.reduce == "ring" and best.stagger == 1
+
+    def test_pack_candidate_roundtrip(self):
+        c = PackCandidate(p=2, q=4, stagger=1, reduce="ring")
+        assert PackCandidate.from_json(c.to_json()) == c
+
+    def test_decode_space_and_roundtrip(self):
+        cands = DesignSpace.decode(4096, 128)
+        assert all(c.bk <= 4096 for c in cands) and len(cands) >= 3
+        c = DecodeCandidate(bk=256)
+        assert DecodeCandidate.from_json(c.to_json()) == c
+        # Tiny cache: space still non-empty.
+        assert DesignSpace.decode(16, 64)
+
+    def test_wkv_space_and_roundtrip(self):
+        cands = DesignSpace.wkv(1024, 64)
+        assert all(c.chunk <= 1024 for c in cands)
+        c = WkvCandidate(chunk=64)
+        assert WkvCandidate.from_json(c.to_json()) == c
+        assert DesignSpace.wkv(8, 64)
+
+
+class TestDispatchFallbacks:
+    def test_pack_config_analytic_fallback(self, tuning_cache):
+        cand = dispatch.pack_config(4096, 4096, 4096, jnp.bfloat16,
+                                    data_axis=1, model_axis=8)
+        want = prior.analytic_pack(4096, 4096, 4096, 1, 8)
+        assert cand == want
+
+    def test_pack_config_prefers_cache(self, tuning_cache):
+        backend, kind = dispatch.backend_fingerprint()
+        key = cache_key("pack", 64, 48, 32, "float32", backend, kind,
+                        extra="mesh1x8")
+        tc = dispatch.get_cache()
+        tc.put(key, {"config": {"p": 4, "q": 2, "stagger": 1,
+                                "reduce": "ring"}, "us": 1.0})
+        tc.save()
+        dispatch.set_cache_path(tuning_cache)
+        cand = dispatch.pack_config(64, 32, 48, jnp.float32,
+                                    data_axis=1, model_axis=8)
+        assert cand == PackCandidate(p=4, q=2, stagger=1, reduce="ring")
+
+    def test_decode_block_fallback_is_seed_default(self, tuning_cache):
+        assert dispatch.decode_block(4096, 128, jnp.float32) == 512
+
+    def test_decode_block_prefers_cache(self, tuning_cache):
+        backend, kind = dispatch.backend_fingerprint()
+        tc = dispatch.get_cache()
+        tc.put(cache_key("decode", 4096, 128, 1, "float32", backend, kind),
+               {"config": {"bk": 1024}, "us": 1.0})
+        tc.save()
+        dispatch.set_cache_path(tuning_cache)
+        assert dispatch.decode_block(4096, 128, jnp.float32) == 1024
+
+    def test_wkv_chunk_fallback_is_seed_default(self, tuning_cache):
+        assert dispatch.wkv_chunk(1024, 64, jnp.float32) == 128
+
+    def test_wkv_chunk_prefers_cache(self, tuning_cache):
+        backend, kind = dispatch.backend_fingerprint()
+        tc = dispatch.get_cache()
+        tc.put(cache_key("wkv", 1024, 64, 1, "float32", backend, kind),
+               {"config": {"chunk": 32}, "us": 1.0})
+        tc.save()
+        dispatch.set_cache_path(tuning_cache)
+        assert dispatch.wkv_chunk(1024, 64, jnp.float32) == 32
+
+    def test_tune_pack_analytic_when_no_devices(self, tuning_cache):
+        # This (single-device) process cannot host a 2x16 mesh: the
+        # analytic prior is stored, flagged as unmeasured.
+        res = dispatch.tune_pack(4096, 1024, 2048, "bf16", data_axis=2,
+                                 model_axis=16)
+        assert res.best is not None
+        assert res.best["p"] * res.best["q"] == 16
+        assert res.trials and res.trials[0].get("analytic")
+        res2 = dispatch.tune_pack(4096, 1024, 2048, "bf16", data_axis=2,
+                                  model_axis=16)
+        assert res2.cache_hit
+
+
+class TestDecodeWkvTuneEndToEnd:
+    def test_tune_decode_writes_cache_and_ops_uses_it(self, tuning_cache):
+        res = dispatch.tune_decode(256, 64, "float32", keep=2, warmup=0,
+                                   reps=1)
+        assert not res.cache_hit and res.best is not None
+        assert dispatch.decode_block(256, 64, jnp.float32) \
+            == res.best["bk"]
+        assert dispatch.tune_decode(256, 64, "float32").cache_hit
+
+    def test_tune_wkv_writes_cache_and_ops_uses_it(self, tuning_cache):
+        res = dispatch.tune_wkv(64, 16, "float32", keep=2, warmup=0,
+                                reps=1)
+        assert not res.cache_hit and res.best is not None
+        assert dispatch.wkv_chunk(64, 16, jnp.float32) \
+            == res.best["chunk"]
+        assert dispatch.tune_wkv(64, 16, "float32").cache_hit
+
+
+def test_model_gemm_shapes_lists_gate_projection():
+    """The swiglu forward pass issues up AND gate — pre-warming must
+    walk both sites (regression: they were collapsed into one entry)."""
+    from repro.models.config import ModelConfig
+    from repro.serving.engine import model_gemm_shapes
+
+    cfg = ModelConfig(name="t", n_layers=1, d_model=64, n_heads=4,
+                      n_kv_heads=2, d_head=16, d_ff=256, vocab_size=512,
+                      compute_dtype="float32", cache_dtype="float32")
+    shapes = model_gemm_shapes(cfg, batch=2, seq=8)
+    # 6 GEMM sites per M (prefill M=16, decode M=2).
+    assert len(shapes) == 12
+    for m in (16, 2):
+        ffn_in = [s for s in shapes if s == (m, cfg.d_model, cfg.d_ff)]
+        assert len(ffn_in) == 2, "up and gate must both be listed"

@@ -1,0 +1,71 @@
+#!/usr/bin/env python3
+"""Markdown link checker for the docs site — no dependencies.
+
+Walks the given markdown files/directories, extracts ``[text](target)``
+links and verifies that every *relative* target resolves to a real file
+(anchors stripped; http/https/mailto targets are skipped — CI stays
+hermetic).  Exits non-zero listing the broken links.
+
+Usage: python tools/check_links.py README.md docs
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+from typing import List, Tuple
+
+# [text](target) — captures up to the first ')', so targets with spaces
+# or a `path "title"` suffix are still *checked* (by their path token)
+# rather than silently skipped.
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)]+)\)")
+_SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def md_files(paths: List[str]) -> List[Path]:
+    out: List[Path] = []
+    for p in paths:
+        path = Path(p)
+        if path.is_dir():
+            out.extend(sorted(path.rglob("*.md")))
+        elif path.suffix == ".md":
+            out.append(path)
+    return out
+
+
+def broken_links(md: Path) -> List[Tuple[int, str]]:
+    """(line number, target) for every relative link that does not
+    resolve from the file's own directory — GitHub's resolution rule,
+    so a root-relative link inside docs/ is correctly flagged."""
+    out: List[Tuple[int, str]] = []
+    for i, line in enumerate(md.read_text().splitlines(), 1):
+        for target in _LINK_RE.findall(line):
+            target = target.split()[0] if target.split() else target
+            if target.startswith(_SKIP_PREFIXES):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            if not (md.parent / rel).exists():
+                out.append((i, target))
+    return out
+
+
+def main(argv: List[str]) -> int:
+    files = md_files(argv or ["README.md", "docs"])
+    if not files:
+        print("no markdown files found", file=sys.stderr)
+        return 1
+    bad = 0
+    for md in files:
+        for line, target in broken_links(md):
+            print(f"{md}:{line}: broken link -> {target}")
+            bad += 1
+    print(f"checked {len(files)} files: "
+          f"{'OK' if not bad else f'{bad} broken links'}")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
