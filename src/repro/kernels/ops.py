@@ -62,6 +62,16 @@ def _pick_tiles(m: int, k: int, n: int, dtype) -> tuple[int, int, int, str]:
     return cfg.tm, cfg.tk, cfg.tn, cfg.order
 
 
+def _check_gqa(hq: int, hkv: int) -> None:
+    """GQA maps each KV head to hq/hkv query heads; a non-divisible
+    head count would silently truncate the group (wrong attention, not
+    an error) — reject it up front, on every backend path."""
+    if hkv <= 0 or hq % hkv:
+        raise ValueError(
+            f"GQA needs query heads divisible by KV heads, got "
+            f"hq={hq}, hkv={hkv} (hq % hkv = {hq % hkv if hkv else hq})")
+
+
 def pack_eligible(m: int, k: int, n: int) -> bool:
     """True when a pack context is installed and (M, K, N) clears its
     FLOP threshold — i.e. matmul() would route to the pack-level GEMM."""
@@ -122,6 +132,7 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     ``bq``/``bk`` default to the tuning cache's best blocks for this
     (Sq, Sk, D) shape, falling back to the 128/128 analytic default.
     """
+    _check_gqa(q.shape[1], k.shape[1])
     if not _use_kernel(mode):
         # Long sequences lower the chunked (flash-algorithm) form so the
         # dry-run's memory analysis reflects the deployed kernel.
@@ -158,6 +169,7 @@ def decode(q: jax.Array, k: jax.Array, v: jax.Array, *,
     cache's best for this (Sk, D) shape, falling back to the analytic
     default of 512.
     """
+    _check_gqa(q.shape[1], k.shape[1])
     if not _use_kernel(mode):
         return ref.ref_decode_attention(q, k, v, length=length, scale=scale)
     b, hq, d = q.shape

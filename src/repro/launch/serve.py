@@ -34,7 +34,7 @@ def main() -> None:
     engine = ServeEngine(cfg, params, ServeConfig(
         batch_slots=args.batch_slots,
         max_len=args.prompt_len + args.max_new + 8,
-        temperature=args.temperature))
+        temperature=args.temperature, seed=args.seed))
 
     rng = np.random.default_rng(args.seed)
     n_batches = -(-args.requests // args.batch_slots)

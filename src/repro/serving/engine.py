@@ -25,6 +25,7 @@ class ServeConfig:
     max_len: int = 1024
     enc_len: int = 0          # encoder length for enc-dec models
     temperature: float = 0.0  # 0 = greedy
+    seed: int = 0             # PRNG seed for sampled (temperature) decoding
     quantize: bool = False    # int8 weight-only (paper multi-precision)
     pretune: bool = True      # resolve tuned kernel configs at init
     # Pack-level sharding (repro.distributed.pack_gemm): when a mesh is
@@ -145,16 +146,19 @@ class ServeEngine:
         logits, caches = self._prefill(self.params, batch, caches)
         out = np.zeros((b, max_new), np.int32)
         tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        # Deterministic sampling stream: one key per generate() call,
+        # folded per decode step — no host RNG, no host round-trip, and
+        # identical outputs for identical (seed, prompts, max_new).
+        key = jax.random.PRNGKey(self.scfg.seed)
         for i in range(max_new):
             out[:, i] = np.asarray(tok)
             logits, caches = self._decode(self.params, tok,
                                           jnp.asarray(s + i), caches)
-            tok = self._sample(logits)
+            tok = self._sample(logits, jax.random.fold_in(key, i))
         return out
 
-    def _sample(self, logits: jax.Array) -> jax.Array:
+    def _sample(self, logits: jax.Array, key: jax.Array) -> jax.Array:
         if self.scfg.temperature <= 0.0:
             return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        key = jax.random.PRNGKey(int(np.random.default_rng().integers(2**31)))
         return jax.random.categorical(
             key, logits / self.scfg.temperature, axis=-1).astype(jnp.int32)

@@ -19,6 +19,11 @@ Schema history (see docs/TUNING.md for the full notes):
   ``decode`` (flash-decode split-K block ``bk``) and ``wkv`` (time
   chunk).  v1 files are discarded wholesale on load, per the
   invalidation policy above.
+* **v3** — ``pack`` configs gain the ``overlap`` bit (the K-streamed
+  compute/communicate fusion schedule of ``pack_gemm``), and analytic
+  fallback entries (``"analytic": true``) are re-measured — treated as
+  misses by ``tune_pack`` — once the host exposes enough devices.  v2
+  files are discarded wholesale on load.
 """
 
 from __future__ import annotations
@@ -29,7 +34,7 @@ import tempfile
 from pathlib import Path
 from typing import Any, Dict, Optional
 
-SCHEMA_VERSION = 2
+SCHEMA_VERSION = 3
 
 _ENV_VAR = "REPRO_TUNING_CACHE"
 

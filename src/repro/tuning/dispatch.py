@@ -150,9 +150,10 @@ def attention_blocks(sq: int, sk: int, d: int, dtype) -> Tuple[int, int]:
 
 def pack_config(m: int, k: int, n: int, dtype, *, data_axis: int = 1,
                 model_axis: int = 1) -> PackCandidate:
-    """Best-known (P, Q, stagger, reduce) pack grid for this shape on a
-    (data_axis, model_axis) mesh.  Cache miss falls back to the analytic
-    prior (the planner's KCE sweep with the staggered-ring schedule)."""
+    """Best-known (P, Q, stagger, reduce, overlap) pack grid for this
+    shape on a (data_axis, model_axis) mesh.  Cache miss falls back to
+    the analytic prior (the planner's KCE sweep under the overlap-aware
+    step model, with the staggered-ring schedule)."""
     dt = canonical_dtype(dtype)
     backend, kind = backend_fingerprint()
     key = cache_key("pack", m, n, k, dt, backend, kind,
@@ -284,13 +285,18 @@ def _measure_and_store(key: str, tc: TuningCache, survivors, measure,
                       cache_hit=False, trials=trials)
 
 
-def _cached_result(key: str, tc: TuningCache,
-                   force: bool) -> Optional[TuneResult]:
+def _cached_result(key: str, tc: TuningCache, force: bool, *,
+                   analytic_is_hit: bool = True) -> Optional[TuneResult]:
     entry = tc.get(key)
-    if entry is not None and not force:
-        return TuneResult(key=key, best=entry.get("config"),
-                          best_us=entry.get("us"), cache_hit=True, trials=[])
-    return None
+    if entry is None or force:
+        return None
+    if not analytic_is_hit and entry.get("analytic"):
+        # An analytic fallback stored by an under-provisioned host is
+        # not a permanent answer: once this host can actually measure,
+        # treat it as a miss and re-tune (the entry is overwritten).
+        return None
+    return TuneResult(key=key, best=entry.get("config"),
+                      best_us=entry.get("us"), cache_hit=True, trials=[])
 
 
 def tune_gemm(m: int, k: int, n: int, dtype, *, keep: int = 8,
@@ -341,15 +347,18 @@ def tune_pack(m: int, k: int, n: int, dtype, *, data_axis: int = 1,
               model_axis: int = 1, keep: int = 6, warmup: int = 1,
               reps: int = 3, force: bool = False,
               cache: Optional[TuningCache] = None) -> TuneResult:
-    """Tune the pack-level grid (P x Q, stagger, reduce order) for a
-    sharded GEMM — schema v2's replacement for the v1 scalar G.
+    """Tune the pack-level grid (P x Q, stagger, reduce order, overlap)
+    for a sharded GEMM — schema v3; v2 lacked the K-streamed overlap
+    bit, v1 was a scalar G.
 
     When this host exposes enough devices (a real slice, or a CPU mesh
     simulated via ``--xla_force_host_platform_device_count``), survivors
     of the analytic prune are *measured* end-to-end through
     ``pack_gemm`` on a live (data_axis, model_axis) mesh.  Otherwise the
     analytic prior is stored directly (flagged ``analytic``), exactly as
-    re-deriving the planner's KCE sweep per mesh."""
+    re-deriving the planner's KCE sweep per mesh.  An analytic entry is
+    only a hit while the host still cannot measure: on a host with
+    enough devices it counts as a miss and is re-measured."""
     import jax
 
     from repro.launch.mesh import compat_make_mesh
@@ -358,11 +367,12 @@ def tune_pack(m: int, k: int, n: int, dtype, *, data_axis: int = 1,
     key = cache_key("pack", m, n, k, dt, backend, kind,
                     extra=f"mesh{data_axis}x{model_axis}")
     tc = cache if cache is not None else get_cache()
-    hit = _cached_result(key, tc, force)
+    capable = len(jax.devices()) >= data_axis * model_axis
+    hit = _cached_result(key, tc, force, analytic_is_hit=not capable)
     if hit is not None:
         return hit
     space = DesignSpace.pack(m, k, n, model_axis)
-    if len(jax.devices()) < data_axis * model_axis:
+    if not capable:
         best = prior.analytic_pack(m, k, n, data_axis, model_axis)
         entry = {
             "config": best.to_json(),

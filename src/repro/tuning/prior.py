@@ -115,16 +115,48 @@ def _cascade_steps(m: int, k: int, n: int, data_axis: int,
     return {c.g: c for c in choices}
 
 
+def pack_step_model(choice, overlap: bool) -> float:
+    """Modeled pack step time (s) — exposed vs. hidden communication.
+
+    Unoverlapped (ring or psum): the 2(p-1)-step reduce starts only
+    after the full local GEMM, so its time ``ici_s`` is fully exposed
+    (the planner's ``step_s``).  Overlapped (the K-streamed pipelined
+    ring of ``pack_gemm``): output bands are computed just in time,
+    chunk by chunk, between the ring steps — the *same* total traffic
+    as the sequential ring, but the reduce-scatter phase hides behind
+    the p - 2 bands still streaming through the MXU (the paper's
+    cascade overlap, Figs. 3/7); the terminal all-gather, with no
+    compute left to hide behind, stays exposed.  Overlap therefore
+    never models slower than the sequential ring: it ties when there
+    is nothing to hide behind (p == 2, or a communication-bound grid)
+    and wins as gamma grows — the per-shape margin is what the
+    empirical tuner measures.
+    """
+    comp = max(choice.compute_s, choice.hbm_s)
+    if choice.g == 1:
+        return comp                       # no cross-device reduce
+    # The planner's ici_s models the cascade *reduce-scatter* traffic
+    # (core/planner.py: out_block * (G-1)/G); the all-gather phase
+    # moves the same bytes again.
+    rs = ag = choice.ici_s
+    if not overlap:
+        return comp + rs + ag
+    hidden = comp * (choice.g - 2) / choice.g
+    return comp + max(0.0, rs - hidden) + ag
+
+
 def pack_score(c: PackCandidate, steps: dict) -> Tuple:
-    """Sort key, higher = better.  Primary: the planner's modeled step
-    time for this cascade depth.  Schedule tiebreak: for P > 1 prefer the
-    staggered ring (offset 1 — adjacent columns shifted by one chunk, the
-    Fig. 7 skew the paper lands on); P == 1 has no reduce, keep psum."""
-    step = steps[c.p].step_s
+    """Sort key, higher = better.  Primary: the overlap-aware modeled
+    step time for this cascade depth.  Schedule tiebreak: for P > 1
+    prefer the K-streamed staggered ring (offset 1 — adjacent columns
+    shifted by one chunk, the Fig. 7 skew the paper lands on); P == 1
+    has no reduce, keep psum."""
+    step = pack_step_model(steps[c.p], c.overlap)
     if c.p == 1:
         sched = 1 if (c.reduce == "psum" and c.stagger == 0) else 0
     else:
-        sched = (2 if c.reduce == "ring" else 0) \
+        sched = (4 if c.overlap else 0) \
+            + (2 if c.reduce == "ring" else 0) \
             + (1 if c.stagger == 1 else 0)
     return (-round(step * 1e9), sched)
 
@@ -140,13 +172,14 @@ def prune_pack(candidates: Sequence[PackCandidate], m: int, k: int, n: int,
 
 def analytic_pack(m: int, k: int, n: int, data_axis: int,
                   model_axis: int) -> PackCandidate:
-    """Cache-miss fallback: the planner's best (G, X) factoring with the
-    staggered-ring schedule (offset 1) whenever there is a reduce."""
+    """Cache-miss fallback: the top-ranked candidate of the analytic
+    prune — the planner's best (G, X) factoring under the overlap-aware
+    step model, with the staggered-ring schedule (offset 1) whenever
+    there is a reduce.  Identical by construction to ``prune_pack``'s
+    #1, so dispatch-without-a-cache and the tuner's prior agree."""
     steps = _cascade_steps(m, k, n, data_axis, model_axis)
-    best = min(steps.values(), key=lambda c: c.step_s)
-    if best.g == 1:
-        return PackCandidate(p=1, q=best.x, stagger=0, reduce="psum")
-    return PackCandidate(p=best.g, q=best.x, stagger=1, reduce="ring")
+    cands = DesignSpace.pack(m, k, n, model_axis)
+    return max(cands, key=lambda c: pack_score(c, steps))
 
 
 # ---------------------------------------------------------------------------

@@ -139,15 +139,25 @@ def time_pack(cand: PackCandidate, m: int, k: int, n: int,
               rtol: float = 2e-2) -> Measurement:
     """Time one pack-level candidate on a live mesh (the simulated
     multi-device CPU mesh in tests/CI; real devices in production).
-    Local GEMMs run mode="auto" — exactly what dispatch will serve."""
+    Local GEMMs run mode="auto" — exactly what dispatch will serve.
+    The candidate is jit-compiled (warmup pays the compile) so ring,
+    psum and the K-streamed overlap schedule compare on steady-state
+    execution, the cost the deployed (jitted) serving path sees."""
+    import jax
+
     import repro.distributed.pack_gemm as pg
     from repro.kernels import ref
     a, b = _probe_arrays(m, k, n, dtype_name)
 
+    @jax.jit
+    def f(a_, b_):
+        return pg.pack_gemm(
+            a_, b_, mesh, p=cand.p, q=cand.q, stagger=cand.stagger,
+            reduce=cand.reduce, overlap=cand.overlap,
+            data_axis=data_axis, mode="auto")
+
     def run():
-        return np.asarray(pg.pack_gemm(
-            a, b, mesh, p=cand.p, q=cand.q, stagger=cand.stagger,
-            reduce=cand.reduce, data_axis=data_axis, mode="auto"))
+        return np.asarray(f(a, b))
 
     samples = measure_fn(run, warmup=warmup, reps=reps)
     got = run()

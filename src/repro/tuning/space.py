@@ -10,7 +10,11 @@ The pack space covers the paper's pack/array levels for the sharded
 GEMM (``distributed.pack_gemm``): the (P, Q) factorization of the model
 axis (P = cascade depth over K, Q = N columns — the Fig. 6 KCE sweep),
 the stagger offset of the ring-reduce schedule (Fig. 7's staggered
-placement), and the reduce order (staggered ring vs. plain psum).
+placement), the reduce order (staggered ring vs. plain psum), and the
+K-streamed ``overlap`` bit (schema v3): whether each K chunk's ring
+reduce-scatter streams behind the next chunk's matmul (Figs. 3/7's
+compute/communicate fusion) instead of draining after the full local
+GEMM.
 
 Decode attention tunes its split-K block ``bk`` over the KV cache, and
 WKV its time-chunk — the two non-GEMM grid knobs the ROADMAP called out.
@@ -52,13 +56,14 @@ class GemmCandidate:
 
 @dataclasses.dataclass(frozen=True)
 class PackCandidate:
-    """One point of the pack-level design space (schema v2; replaces the
-    v1 scalar pack-size G)."""
+    """One point of the pack-level design space (schema v3; v2 lacked
+    the ``overlap`` bit, v1 was a scalar pack-size G)."""
 
     p: int                     # cascade depth: K shards per pack column
     q: int                     # pack columns: N shards (p * q = |model|)
     stagger: int = 1           # ring-schedule offset per column (Fig. 7)
     reduce: str = "ring"       # "ring" (staggered) | "psum" (baseline)
+    overlap: bool = False      # K-streamed compute/communicate fusion
 
     def to_json(self) -> dict:
         return dataclasses.asdict(self)
@@ -67,7 +72,8 @@ class PackCandidate:
     def from_json(cls, d: dict) -> "PackCandidate":
         return cls(p=int(d["p"]), q=int(d["q"]),
                    stagger=int(d.get("stagger", 0)),
-                   reduce=str(d.get("reduce", "psum")))
+                   reduce=str(d.get("reduce", "psum")),
+                   overlap=bool(d.get("overlap", False)))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -185,13 +191,18 @@ class DesignSpace:
     def pack(cls, m: int, k: int, n: int,
              model_axis: int) -> List["PackCandidate"]:
         """Pack-level candidates: every (P, Q) factorization of the model
-        axis (the Fig. 6 KCE sweep), crossed with the stagger offset and
-        the reduce order.  P = 1 has no cross-device reduce, so only the
-        trivial schedule survives there.
+        axis (the Fig. 6 KCE sweep), crossed with the stagger offset,
+        the reduce order, and the K-streamed overlap bit (ring only —
+        psum has no ring to stream, and P = 1 has no cross-device reduce
+        at all, so only the trivial schedule survives there).
 
         >>> [(c.p, c.q) for c in DesignSpace.pack(512, 512, 512, 4)
         ...  if c.reduce == "psum" and c.stagger == 0]
         [(1, 4), (2, 2), (4, 1)]
+        >>> sorted({(c.reduce, c.overlap)
+        ...         for c in DesignSpace.pack(512, 512, 512, 4)
+        ...         if c.p == 2})
+        [('psum', False), ('ring', False), ('ring', True)]
         """
         out: List[PackCandidate] = []
         for p in range(1, model_axis + 1):
@@ -204,8 +215,10 @@ class DesignSpace:
                 continue
             staggers = sorted({0, 1, p // 2})
             for stagger in staggers:
-                out.append(PackCandidate(p=p, q=q, stagger=stagger,
-                                         reduce="ring"))
+                for overlap in (False, True):
+                    out.append(PackCandidate(p=p, q=q, stagger=stagger,
+                                             reduce="ring",
+                                             overlap=overlap))
             out.append(PackCandidate(p=p, q=q, stagger=0, reduce="psum"))
         return out
 

@@ -24,47 +24,96 @@ from repro.launch.mesh import compat_make_mesh  # noqa: E402
 
 
 def check_pack_numerics():
-    """pack_gemm vs the jnp oracle across (P, Q) grids, stagger offsets
-    and reduce orders, on divisible and deliberately awkward shapes."""
+    """pack_gemm vs the jnp oracle across (P, Q) grids, stagger offsets,
+    reduce orders and the K-streamed overlap schedule, on divisible and
+    deliberately awkward shapes."""
     rng = np.random.default_rng(0)
     mesh = compat_make_mesh((1, 8), ("data", "model"))
     shapes = [(16, 32, 24),     # divisible everywhere
               (13, 100, 27)]    # M/K/N all non-divisible by any grid
-    configs = [(1, 8, 0, "psum"), (2, 4, 0, "psum"), (2, 4, 0, "ring"),
-               (2, 4, 1, "ring"), (4, 2, 1, "ring"), (4, 2, 3, "ring"),
-               (8, 1, 1, "ring")]
+    configs = [(1, 8, 0, "psum", False), (2, 4, 0, "psum", False),
+               (2, 4, 0, "ring", False), (2, 4, 1, "ring", False),
+               (4, 2, 1, "ring", False), (4, 2, 3, "ring", False),
+               (8, 1, 1, "ring", False),
+               (2, 4, 1, "ring", True), (4, 2, 1, "ring", True),
+               (4, 2, 3, "ring", True), (8, 1, 1, "ring", True),
+               (4, 2, 1, "overlap", None)]   # the bench flag's spelling
     for (m, k, n) in shapes:
         a = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
         b = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
         want = np.asarray(ref.ref_gemm(a, b))
-        for (p, q, stagger, red) in configs:
+        for (p, q, stagger, red, ov) in configs:
             got = np.asarray(pg.pack_gemm(a, b, mesh, p=p, q=q,
-                                          stagger=stagger, reduce=red))
+                                          stagger=stagger, reduce=red,
+                                          overlap=ov))
             err = float(np.max(np.abs(got - want)))
-            assert err < 1e-4, (m, k, n, p, q, stagger, red, err)
+            assert err < 1e-4, (m, k, n, p, q, stagger, red, ov, err)
     # bf16 in, bf16 out (f32 accumulation inside the pack).
     a = jnp.asarray(rng.normal(size=(16, 64)), jnp.bfloat16)
     b = jnp.asarray(rng.normal(size=(64, 24)), jnp.bfloat16)
-    got = np.asarray(pg.pack_gemm(a, b, mesh, p=2, q=4, stagger=1,
-                                  reduce="ring").astype(jnp.float32))
     want = np.asarray(ref.ref_gemm(a, b).astype(jnp.float32))
-    assert float(np.max(np.abs(got - want))) < 0.2
+    for ov in (False, True):
+        got = np.asarray(pg.pack_gemm(a, b, mesh, p=2, q=4, stagger=1,
+                                      reduce="ring",
+                                      overlap=ov).astype(jnp.float32))
+        assert float(np.max(np.abs(got - want))) < 0.2
     print("pack numerics OK")
 
 
 def check_pack_int8():
-    """int8 requantizes once after the full reduction — exact match."""
+    """int8 requantizes once after the full reduction — exact match for
+    both the barrier ring and the K-streamed overlap (int32 partial
+    sums are associative, so the chunk order cannot matter)."""
     rng = np.random.default_rng(1)
     mesh = compat_make_mesh((1, 8), ("data", "model"))
     ai = jnp.asarray(rng.integers(-128, 128, size=(16, 96)), jnp.int8)
     bi = jnp.asarray(rng.integers(-128, 128, size=(96, 24)), jnp.int8)
     want = np.asarray(ref.ref_gemm(ai, bi, out_dtype=jnp.int8,
                                    scale=0.002))
-    got = np.asarray(pg.pack_gemm(ai, bi, mesh, p=4, q=2, stagger=1,
-                                  reduce="ring", out_dtype=jnp.int8,
-                                  scale=0.002))
-    assert (got == want).all()
+    for ov in (False, True):
+        got = np.asarray(pg.pack_gemm(ai, bi, mesh, p=4, q=2, stagger=1,
+                                      reduce="ring", overlap=ov,
+                                      out_dtype=jnp.int8, scale=0.002))
+        assert (got == want).all(), f"overlap={ov}"
     print("pack int8 OK")
+
+
+def check_overlap_invariance():
+    """Property: the result is invariant to the stagger offset and to
+    overlap on/off — both only reorder associative accumulations.
+    int8 must be bit-exact across every schedule; float agrees to a
+    tight tolerance.  Also: the staged A entering shard_map is the
+    q-free (d, p, Md, cyc*kb) tensor, never a Q-fold replica."""
+    rng = np.random.default_rng(5)
+    mesh = compat_make_mesh((1, 8), ("data", "model"))
+
+    # int8: every (stagger, overlap) schedule is bit-identical.
+    ai = jnp.asarray(rng.integers(-128, 128, size=(13, 100)), jnp.int8)
+    bi = jnp.asarray(rng.integers(-128, 128, size=(100, 27)), jnp.int8)
+    outs = [np.asarray(pg.pack_gemm(ai, bi, mesh, p=4, q=2, stagger=s,
+                                    reduce="ring", overlap=ov,
+                                    out_dtype=jnp.int8, scale=0.004))
+            for s in range(4) for ov in (False, True)]
+    for o in outs[1:]:
+        assert (o == outs[0]).all(), "int8 schedules must be bit-exact"
+
+    # float: schedules agree within summation-order tolerance.
+    a = jnp.asarray(rng.normal(size=(32, 64)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(64, 48)), jnp.float32)
+    fouts = [np.asarray(pg.pack_gemm(a, b, mesh, p=4, q=2, stagger=s,
+                                     reduce="ring", overlap=ov))
+             for s in range(4) for ov in (False, True)]
+    for o in fouts[1:]:
+        assert float(np.max(np.abs(o - fouts[0]))) < 1e-5
+
+    # Q-free staging: the host-side A block layout has no q dimension.
+    d, p, cyc, kb, md = 1, 4, 2, 8, 16
+    ap = jnp.zeros((md * d, p * cyc * kb), jnp.float32)
+    assert pg.stage_a_blocks(ap, d, p, cyc, kb).shape \
+        == (d, p, md, cyc * kb)
+    assert pg.stage_b_blocks(jnp.zeros((p * cyc * kb, 6 * 2)), p, 2,
+                             cyc, kb).shape == (2, p, cyc * kb, 6)
+    print("overlap invariance OK")
 
 
 def check_array_level():
@@ -76,11 +125,13 @@ def check_array_level():
         b = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
         want = np.asarray(ref.ref_gemm(a, b))
         for (p, q) in [(1, 4), (2, 2), (4, 1)]:
-            got = np.asarray(pg.array_gemm(
-                a, b, mesh, p=p, q=q, stagger=1,
-                reduce="ring" if p > 1 else "psum"))
-            err = float(np.max(np.abs(got - want)))
-            assert err < 1e-4, (m, k, n, p, q, err)
+            for ov in (False, True):
+                got = np.asarray(pg.array_gemm(
+                    a, b, mesh, p=p, q=q, stagger=1,
+                    reduce="ring" if p > 1 else "psum",
+                    overlap=ov and p > 1))
+                err = float(np.max(np.abs(got - want)))
+                assert err < 1e-4, (m, k, n, p, q, ov, err)
     print("array level OK")
 
 
@@ -103,6 +154,44 @@ def check_ops_dispatch():
     with pg.pack_context(mesh, min_flops=1e18):
         assert not ops.pack_eligible(32, 64, 48)  # below threshold
     print("ops dispatch OK")
+
+
+def check_overlap_resolution():
+    """Explicit overlap=True pins the ring schedule family even when
+    the tuner's cached pick for the shape is psum (it must not raise
+    based on cache state), and a fully-specified psum call never
+    consults the tuner."""
+    from repro.tuning import dispatch
+    from repro.tuning.cache import cache_key
+
+    mesh = compat_make_mesh((1, 8), ("data", "model"))
+    rng = np.random.default_rng(6)
+    a = jnp.asarray(rng.normal(size=(16, 64)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(64, 24)), jnp.float32)
+    want = np.asarray(ref.ref_gemm(a, b))
+
+    backend, kind = dispatch.backend_fingerprint()
+    key = cache_key("pack", 16, 24, 64, "float32", backend, kind,
+                    extra="mesh1x8")
+    tc = dispatch.get_cache()
+    tc.put(key, {"config": {"p": 2, "q": 4, "stagger": 0,
+                            "reduce": "psum", "overlap": False},
+                 "us": 1.0})
+    tc.save()
+    got = np.asarray(pg.pack_gemm(a, b, mesh, overlap=True))
+    assert float(np.max(np.abs(got - want))) < 1e-4
+
+    orig = dispatch.pack_config
+    def boom(*a_, **k_):
+        raise AssertionError("fully-specified call consulted the tuner")
+    dispatch.pack_config = boom
+    try:
+        got = np.asarray(pg.pack_gemm(a, b, mesh, p=2, q=4, stagger=0,
+                                      reduce="psum"))
+    finally:
+        dispatch.pack_config = orig
+    assert float(np.max(np.abs(got - want))) < 1e-4
+    print("overlap resolution OK")
 
 
 def check_engine_pack():
@@ -144,8 +233,9 @@ def check_engine_pack():
 
 
 def check_tune_pack_measured():
-    """tune_pack measures survivors on the live mesh and dispatch then
-    serves the tuned grid from the cache."""
+    """tune_pack measures survivors (schema v3: overlap included) on
+    the live mesh and dispatch then serves the tuned grid from the
+    cache."""
     from repro.tuning import dispatch
 
     res = dispatch.tune_pack(16, 32, 24, "float32", data_axis=2,
@@ -153,22 +243,56 @@ def check_tune_pack_measured():
     assert not res.cache_hit and res.best is not None
     assert len(res.trials) == 3
     assert all("us" in t for t in res.trials), "expected measured trials"
+    assert all("overlap" in t["config"] for t in res.trials), \
+        "schema v3 candidates carry the overlap bit"
     cand = dispatch.pack_config(16, 32, 24, jnp.float32, data_axis=2,
                                 model_axis=4)
-    assert (cand.p, cand.q, cand.stagger, cand.reduce) == (
+    assert (cand.p, cand.q, cand.stagger, cand.reduce, cand.overlap) == (
         res.best["p"], res.best["q"], res.best["stagger"],
-        res.best["reduce"])
+        res.best["reduce"], res.best["overlap"])
     res2 = dispatch.tune_pack(16, 32, 24, "float32", data_axis=2,
                               model_axis=4)
     assert res2.cache_hit
     print("tune pack measured OK")
 
 
+def check_analytic_entry_remeasured():
+    """A cached analytic fallback entry is NOT a permanent hit: on a
+    host with enough devices tune_pack re-measures and overwrites it
+    (the dispatch.py:_cached_result bugfix)."""
+    from repro.tuning import dispatch
+    from repro.tuning.cache import cache_key
+    from repro.tuning.prior import analytic_pack
+
+    backend, kind = dispatch.backend_fingerprint()
+    key = cache_key("pack", 24, 16, 48, "float32", backend, kind,
+                    extra="mesh2x4")
+    tc = dispatch.get_cache()
+    # Simulate an under-provisioned host's leftover: analytic-flagged.
+    tc.put(key, {"config": analytic_pack(24, 48, 16, 2, 4).to_json(),
+                 "analytic": True, "space_size": 0, "measured": 0,
+                 "tuned_at": 0.0})
+    tc.save()
+    # This host has 8 devices >= 2*4: the analytic entry is a miss.
+    res = dispatch.tune_pack(24, 48, 16, "float32", data_axis=2,
+                             model_axis=4, keep=2, warmup=0, reps=1)
+    assert not res.cache_hit, "analytic entry must be re-measured"
+    assert res.trials and all("us" in t for t in res.trials)
+    assert not tc.get(key).get("analytic"), "entry must now be measured"
+    # Once measured, it IS a permanent hit.
+    assert dispatch.tune_pack(24, 48, 16, "float32", data_axis=2,
+                              model_axis=4).cache_hit
+    print("analytic remeasure OK")
+
+
 if __name__ == "__main__":
     check_pack_numerics()
     check_pack_int8()
+    check_overlap_invariance()
     check_array_level()
     check_ops_dispatch()
+    check_overlap_resolution()
     check_engine_pack()
     check_tune_pack_measured()
+    check_analytic_entry_remeasured()
     print("ALL PACK OK")

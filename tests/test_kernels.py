@@ -115,9 +115,29 @@ def test_flash_attention_bf16():
                                rtol=3e-2, atol=3e-2)
 
 
+@pytest.mark.parametrize("mode", ["ref", "kernel"])
+def test_attention_rejects_non_divisible_gqa(mode):
+    """Regression: hq % hkv != 0 used to silently truncate the GQA
+    group (wrong attention); now it raises on every backend path."""
+    q = randf((1, 5, 32, 16))
+    k = randf((1, 3, 32, 16))
+    v = randf((1, 3, 32, 16))
+    with pytest.raises(ValueError, match="divisible"):
+        ops.attention(q, k, v, mode=mode)
+
+
 # ---------------------------------------------------------------------------
 # Decode attention
 # ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", ["ref", "kernel"])
+def test_decode_rejects_non_divisible_gqa(mode):
+    q = randf((2, 6, 16))
+    k = randf((2, 4, 64, 16))
+    v = randf((2, 4, 64, 16))
+    with pytest.raises(ValueError, match="divisible"):
+        ops.decode(q, k, v, mode=mode)
 
 
 @pytest.mark.parametrize("hq,hkv,sk", [(8, 2, 256), (4, 4, 300), (16, 2, 128)])

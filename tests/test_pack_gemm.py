@@ -66,21 +66,72 @@ class TestPackSpace:
             assert c.reduce in ("ring", "psum")
             if c.p == 1:
                 assert c.reduce == "psum" and c.stagger == 0
+                assert not c.overlap
             else:
                 assert 0 <= c.stagger < c.p
+            if c.overlap:
+                assert c.reduce == "ring", \
+                    "overlap streams the ring schedule only"
+
+    def test_pack_space_crosses_overlap(self):
+        cands = DesignSpace.pack(512, 512, 512, 8)
+        for p in (2, 4, 8):
+            ring = {(c.stagger, c.overlap) for c in cands
+                    if c.p == p and c.reduce == "ring"}
+            staggers = {s for s, _ in ring}
+            assert ring == {(s, ov) for s in staggers
+                            for ov in (False, True)}
 
     def test_pack_prune_prefers_staggered_ring(self):
         cands = DesignSpace.pack(4096, 4096, 4096, 8)
         kept = prior.prune_pack(cands, 4096, 4096, 4096, 1, 8, keep=3)
         best = kept[0]
         fallback = prior.analytic_pack(4096, 4096, 4096, 1, 8)
-        assert (best.p, best.q) == (fallback.p, fallback.q)
+        assert best == fallback, \
+            "dispatch fallback must equal the prune's #1"
         if best.p > 1:
             assert best.reduce == "ring" and best.stagger == 1
 
     def test_pack_candidate_roundtrip(self):
-        c = PackCandidate(p=2, q=4, stagger=1, reduce="ring")
+        c = PackCandidate(p=2, q=4, stagger=1, reduce="ring", overlap=True)
         assert PackCandidate.from_json(c.to_json()) == c
+        # v2-shaped entries (no overlap key) load as unoverlapped.
+        v2 = {"p": 2, "q": 4, "stagger": 1, "reduce": "ring"}
+        assert PackCandidate.from_json(v2).overlap is False
+
+    def test_pack_step_model_exposed_vs_hidden(self):
+        """The analytic overlap term: a compute-bound cascade hides its
+        reduce-scatter behind the in-flight bands (overlap wins); with
+        nothing to hide behind — p == 2's zero interleaved bands, or a
+        communication-bound grid — overlap ties the sequential ring
+        (same traffic), never loses."""
+        import types
+        mk = lambda g, comp, ici: types.SimpleNamespace(
+            g=g, compute_s=comp, hbm_s=0.0, ici_s=ici)
+        compute_bound = mk(4, 1.0, 0.01)
+        assert prior.pack_step_model(compute_bound, True) \
+            < prior.pack_step_model(compute_bound, False)
+        comm_bound = mk(4, 1e-9, 1.0)
+        assert prior.pack_step_model(comm_bound, True) \
+            == pytest.approx(prior.pack_step_model(comm_bound, False))
+        pair = mk(2, 1.0, 0.5)    # p == 2: no bands left to interleave
+        assert prior.pack_step_model(pair, True) \
+            == prior.pack_step_model(pair, False)
+        # Depth-1 grids have no reduce: overlap is a no-op in the model.
+        solo = mk(1, 1.0, 0.5)
+        assert prior.pack_step_model(solo, True) \
+            == prior.pack_step_model(solo, False) == 1.0
+
+    def test_pack_prune_ranks_overlap_first_when_compute_bound(self):
+        """For a grid where the cascade (p > 1) wins, the K-streamed
+        schedule must outrank the barrier ring under the prior."""
+        steps = prior._cascade_steps(8192, 32768, 512, 1, 8)
+        cands = [c for c in DesignSpace.pack(8192, 32768, 512, 8)
+                 if c.p > 1 and c.reduce == "ring" and c.stagger == 1]
+        ranked = sorted(cands, key=lambda c: prior.pack_score(c, steps),
+                        reverse=True)
+        assert ranked[0].overlap, \
+            "compute-bound cascade should hide its reduce-scatter"
 
     def test_decode_space_and_roundtrip(self):
         cands = DesignSpace.decode(4096, 128)
@@ -144,15 +195,39 @@ class TestDispatchFallbacks:
 
     def test_tune_pack_analytic_when_no_devices(self, tuning_cache):
         # This (single-device) process cannot host a 2x16 mesh: the
-        # analytic prior is stored, flagged as unmeasured.
+        # analytic prior is stored, flagged as unmeasured — and stays a
+        # cache hit for as long as the host cannot measure it.
         res = dispatch.tune_pack(4096, 1024, 2048, "bf16", data_axis=2,
                                  model_axis=16)
         assert res.best is not None
         assert res.best["p"] * res.best["q"] == 16
+        assert "overlap" in res.best, "schema v3 configs carry overlap"
         assert res.trials and res.trials[0].get("analytic")
         res2 = dispatch.tune_pack(4096, 1024, 2048, "bf16", data_axis=2,
                                   model_axis=16)
         assert res2.cache_hit
+
+    def test_tune_pack_remeasures_analytic_on_capable_host(
+            self, tuning_cache):
+        """Regression: an analytic fallback entry must become a MISS on
+        a host that can actually measure the mesh (here 1x1, which any
+        host can) instead of a permanent cache hit."""
+        backend, kind = dispatch.backend_fingerprint()
+        key = cache_key("pack", 16, 8, 32, "float32", backend, kind,
+                        extra="mesh1x1")
+        tc = dispatch.get_cache()
+        tc.put(key, {"config": {"p": 1, "q": 1, "stagger": 0,
+                                "reduce": "psum", "overlap": False},
+                     "analytic": True})
+        tc.save()
+        res = dispatch.tune_pack(16, 32, 8, "float32", data_axis=1,
+                                 model_axis=1, keep=1, warmup=0, reps=1)
+        assert not res.cache_hit, \
+            "analytic entry on a capable host must re-measure"
+        assert res.trials and all("us" in t for t in res.trials)
+        assert not dispatch.get_cache().get(key).get("analytic")
+        assert dispatch.tune_pack(16, 32, 8, "float32", data_axis=1,
+                                  model_axis=1).cache_hit
 
 
 class TestDecodeWkvTuneEndToEnd:

@@ -217,6 +217,30 @@ class TestServing:
         assert out1.shape == (2, 6)
         assert out1.min() >= 0 and out1.max() < TINY.vocab_size
 
+    def test_seeded_sampling_reproducible(self):
+        """Regression: _sample drew a fresh host-RNG PRNGKey per token,
+        so temperature sampling was unseedable.  ServeConfig.seed now
+        threads a fold_in-per-step jax.random key: identical
+        (seed, prompts) reproduce identical outputs — across generate()
+        calls and across engines — and different seeds diverge."""
+        params = init_params(jax.random.PRNGKey(0), TINY)
+        prompts = np.random.default_rng(3).integers(
+            0, TINY.vocab_size, size=(2, 8)).astype(np.int32)
+
+        def engine(seed):
+            return ServeEngine(TINY, params, ServeConfig(
+                batch_slots=2, max_len=64, temperature=1.0, seed=seed))
+
+        e7 = engine(7)
+        out1 = e7.generate(prompts, max_new=8)
+        out2 = e7.generate(prompts, max_new=8)
+        np.testing.assert_array_equal(out1, out2)
+        out3 = engine(7).generate(prompts, max_new=8)
+        np.testing.assert_array_equal(out1, out3)
+        out4 = engine(8).generate(prompts, max_new=8)
+        assert not np.array_equal(out1, out4), \
+            "different seeds should sample different tokens"
+
 
 class TestMixedPrecision:
     def test_bf16_master_weights_descend(self):
