@@ -15,9 +15,14 @@ scaling level, mirroring how GAMA evaluates single AIE -> pack -> array:
   grid, the flash-decode split-K block and the WKV chunk;
 * ``array``: the full-mesh level — packs composed over the data axis
   (``array_gemm``) and a small model served with its lm-head/ffn GEMMs
-  sharded through packs.
+  sharded through packs;
+* ``serve``: the serving level — continuous batching (slot-based KV
+  cache + mid-decode admission) vs serialized one-shot batches on the
+  same ragged staggered-arrival trace, reporting tokens/s and p50/p99
+  per-token latency, plus the schema-v4 ``batch_slots`` tuning pass.
 
-Run: PYTHONPATH=src python -m benchmarks.run [--level single|pack|array]
+Run: PYTHONPATH=src python -m benchmarks.run
+                              [--level single|pack|array|serve]
                                              [--filter substr]
                                              [--reduce ring|psum|overlap|all]
                                              [--json BENCH_out.json]
@@ -352,6 +357,81 @@ def bench_pack_tuning() -> None:
 
 
 # ---------------------------------------------------------------------------
+# Serve level: continuous batching vs serialized one-shot batches
+# ---------------------------------------------------------------------------
+
+
+def _serve_trace(vocab: int):
+    """Ragged staggered trace: 8 requests, 4 slots, mixed max_new.  The
+    raggedness is the point — a one-shot batch decodes until its longest
+    member finishes (finished rows idle), continuous batching refills
+    the slot immediately."""
+    from repro.launch.serve import synth_trace
+    ragged_new = [4, 18, 6, 16, 4, 14, 6, 12]
+    trace = synth_trace(len(ragged_new), 12, 0, 1, vocab, seed=0)
+    for t, mn in zip(trace, ragged_new):
+        t["max_new"] = mn
+    return trace
+
+
+def bench_serve_trace() -> None:
+    """Continuous batching vs serialized one-shot batches on the same
+    ragged staggered-arrival trace: tokens/s and p50/p99 per-token
+    latency (us_per_call is per *generated token*).  Both run jitted
+    and pre-compiled (first replay pays compile), so the rows compare
+    steady-state scheduling, not trace time."""
+    import jax
+
+    from repro import configs as C
+    from repro.launch.serve import run_trace
+    from repro.models import init_params
+    from repro.serving.engine import ServeConfig, ServeEngine
+    cfg = C.get_smoke("smollm_360m")
+    params = init_params(jax.random.PRNGKey(1), cfg)
+    trace = _serve_trace(cfg.vocab_size)
+    slots = 4
+    max_len = max(len(t["prompt"]) + t["max_new"] for t in trace) + 8
+    useful = sum(t["max_new"] for t in trace)
+    engine = ServeEngine(cfg, params, ServeConfig(batch_slots=slots,
+                                                  max_len=max_len))
+    try:
+        run_trace(engine, trace, log=None)          # compile warmup
+        rep = run_trace(engine, trace, log=None)
+        emit("serve.continuous.s4", rep["wall_s"] * 1e6 / rep["tokens"],
+             f"tok_s={rep['tok_s']:.1f} p50={rep['p50_ms']:.2f}ms "
+             f"p99={rep['p99_ms']:.2f}ms shared_steps={rep['shared_steps']} "
+             f"decode_steps={rep['decode_steps']}")
+        # Serialized baseline: same engine, same requests, grouped into
+        # uniform one-shot batches (arrivals ignored — the baseline gets
+        # every benefit of the doubt); each batch decodes to its longest
+        # member, so finished rows burn slots.
+        batches = [trace[i:i + slots] for i in range(0, len(trace), slots)]
+        t0 = time.perf_counter()
+        for group in batches:
+            prompts = np.stack([g["prompt"] for g in group])
+            engine.generate(prompts, max(g["max_new"] for g in group))
+        wall = time.perf_counter() - t0
+        ratio = (useful / wall) / rep["tok_s"]
+        emit("serve.serialized.s4", wall * 1e6 / useful,
+             f"tok_s={useful / wall:.1f} batches={len(batches)} "
+             f"vs_continuous={ratio:.2f}x")
+    finally:
+        engine.close()
+
+
+def bench_serve_tuning() -> None:
+    """The schema-v4 serve tunable: measure batch_slots candidates end
+    to end and persist the winner."""
+    from repro import configs as C
+    from repro.tuning import dispatch
+    cfg = C.get_smoke("smollm_360m")
+    res = dispatch.tune_serve(cfg, max_len=32, prompt_len=8, max_new=6,
+                              requests=6, keep=2, warmup=0, reps=1)
+    emit("serve.tune.batch_slots", res.best_us or 0.0,
+         f"best={res.best} measured={len(res.trials)} hit={res.cache_hit}")
+
+
+# ---------------------------------------------------------------------------
 # Array level: packs composed over the data axis (the full mesh)
 # ---------------------------------------------------------------------------
 
@@ -431,15 +511,21 @@ ARRAY_BENCHES = [
     ("array_serve", bench_array_serve),
 ]
 
-LEVELS = {"single": BENCHES, "pack": PACK_BENCHES, "array": ARRAY_BENCHES}
+SERVE_BENCHES = [
+    ("serve_trace", bench_serve_trace),
+    ("serve_tuning", bench_serve_tuning),
+]
+
+LEVELS = {"single": BENCHES, "pack": PACK_BENCHES, "array": ARRAY_BENCHES,
+          "serve": SERVE_BENCHES}
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--level", choices=sorted(LEVELS), default="single",
-                    help="evaluation level: single kernel, pack, or "
-                         "full-array (pack/array simulate an 8-device "
-                         "CPU mesh)")
+                    help="evaluation level: single kernel, pack, "
+                         "full-array, or serving (pack/array simulate "
+                         "an 8-device CPU mesh)")
     ap.add_argument("--filter", type=str, default="")
     ap.add_argument("--reduce", choices=("ring", "psum", "overlap", "all"),
                     default="all",
@@ -451,7 +537,7 @@ def main() -> None:
     args = ap.parse_args()
     global _PACK_REDUCE
     _PACK_REDUCE = args.reduce
-    if args.level != "single":
+    if args.level in ("pack", "array"):
         # Must precede any jax initialization (no bench imported jax
         # yet).  Append to any preexisting XLA_FLAGS; an explicit
         # device-count flag from the caller wins.

@@ -10,6 +10,14 @@ feeds the MXU/VPU efficiently — this is the TPU analogue of the paper's
 Grid: (B, Hkv, Sk/bk), KV innermost ("arbitrary"); length masking uses a
 (B, 1) int32 length tensor (production would use scalar prefetch; a VMEM
 (1, 1) block keeps the kernel interpret-validatable).
+
+The length is **per slot**: in a ragged continuous batch every row of
+the cache belongs to a different request at a different position, and
+the kernel never attends past its own row's length — whole split-K
+blocks beyond it are skipped (the ``k_block_start < length`` guard), a
+zero-length row yields a zero output (the ``safe_l`` divisor), and
+stale KV from a slot's previous occupant is unreachable by
+construction.
 """
 
 from __future__ import annotations

@@ -165,15 +165,28 @@ def decode(q: jax.Array, k: jax.Array, v: jax.Array, *,
            scale: Optional[float] = None, mode: Mode = "auto") -> jax.Array:
     """Single-token decode attention.  q: (B,Hq,D); kv cache: (B,Hkv,Sk,D).
 
+    ``length`` is a (B,) int32 vector of *per-slot* valid-prefix lengths
+    (a ragged continuous batch: each slot attends only to its own
+    prefix; positions >= length[b] are masked on every backend path).
     ``bk`` (the split-K block over the cache) defaults to the tuning
     cache's best for this (Sk, D) shape, falling back to the analytic
     default of 512.
     """
     _check_gqa(q.shape[1], k.shape[1])
-    if not _use_kernel(mode):
-        return ref.ref_decode_attention(q, k, v, length=length, scale=scale)
     b, hq, d = q.shape
     _, hkv, sk, _ = k.shape
+    if length is not None:
+        length = jnp.asarray(length, jnp.int32)
+        if length.shape != (b,):
+            raise ValueError(
+                f"decode length must be per-slot with shape ({b},), got "
+                f"{length.shape} — a scalar would silently mask every "
+                f"slot to one shared prefix")
+        # An over-long slot (stale host bookkeeping) must not read the
+        # pad region as valid history.
+        length = jnp.minimum(length, sk)
+    if not _use_kernel(mode):
+        return ref.ref_decode_attention(q, k, v, length=length, scale=scale)
     group = hq // hkv
     if bk is None:
         from repro.tuning import dispatch

@@ -1,20 +1,121 @@
-"""Serving launcher: batched prefill + decode over request batches.
+"""Serving launcher: continuous batching over a request-trace workload.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch qwen3_8b --smoke \
-        --requests 8 --prompt_len 16 --max_new 24
+Replays a trace of requests with staggered arrivals (measured in engine
+steps, so runs are deterministic) through the continuous-batching
+``ServeEngine``: requests are admitted into free KV slots mid-decode and
+share decode steps with older in-flight requests.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch smollm_360m \
+        --requests 6 --prompt_len 12 --max_new 16 --stagger 3
+
+Trace file (``--trace``, JSON lines; see docs/SERVING.md)::
+
+    {"id": 0, "arrival": 0, "prompt_len": 12, "max_new": 16}
+    {"id": 1, "arrival": 4, "prompt": [17, 3, 99], "max_new": 8}
+
+``prompt`` gives explicit token ids; ``prompt_len`` asks the launcher to
+synthesize that many random tokens.  ``--verify`` re-runs every request
+through a one-slot one-shot ``generate()`` and checks the continuous
+outputs are identical.  ``--mesh D,M`` installs a pack mesh so the large
+GEMMs run as pack-level collective matmuls (simulate devices with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``).
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import time
+from typing import Callable, Dict, List, Optional
 
-import jax
 import numpy as np
 
-from repro import configs as C
-from repro.models import init_params
-from repro.serving.engine import ServeConfig, ServeEngine
+
+def load_trace(path: str, vocab_size: int, seed: int = 0) -> List[dict]:
+    """Parse a JSONL trace; synthesize prompt tokens where only
+    ``prompt_len`` is given (deterministically, per request id)."""
+    out = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line or line.startswith("#"):
+                continue
+            rec = json.loads(line)
+            if "prompt" in rec:
+                prompt = np.asarray(rec["prompt"], np.int32)
+            else:
+                rng = np.random.default_rng(seed + int(rec["id"]))
+                prompt = rng.integers(0, vocab_size,
+                                      size=(int(rec["prompt_len"]),)
+                                      ).astype(np.int32)
+            out.append({"id": int(rec["id"]),
+                        "arrival": int(rec.get("arrival", 0)),
+                        "prompt": prompt,
+                        "max_new": int(rec["max_new"])})
+    return sorted(out, key=lambda r: (r["arrival"], r["id"]))
+
+
+def synth_trace(requests: int, prompt_len: int, max_new: int,
+                stagger: int, vocab_size: int, seed: int = 0
+                ) -> List[dict]:
+    """Staggered-arrival synthetic trace: request i arrives at step
+    ``i * stagger`` — with stagger >= 1, later requests are admitted
+    while earlier ones are mid-decode."""
+    rng = np.random.default_rng(seed)
+    return [{"id": i, "arrival": i * stagger,
+             "prompt": rng.integers(0, vocab_size, size=(prompt_len,)
+                                    ).astype(np.int32),
+             "max_new": max_new}
+            for i in range(requests)]
+
+
+def run_trace(engine, trace: List[dict],
+              log: Optional[Callable[[str], None]] = print) -> dict:
+    """Replay ``trace`` through the continuous-batching loop.  Returns
+    {results: {trace_id: tokens}, wall_s, tokens, tok_s, p50_ms, p99_ms,
+    shared_steps}; per-token latency is the wall time of the engine step
+    that emitted the token."""
+    log = log or (lambda s: None)
+    rid_to_tid = {}
+    # Trace arrivals are relative to the replay's start: offset by the
+    # engine's current step so a warm engine (e.g. a bench replaying
+    # the trace after a compile warmup) still sees the stagger.
+    base = engine.step_count
+    for t in trace:
+        rid = engine.submit(t["prompt"], t["max_new"],
+                            arrival=base + t["arrival"])
+        rid_to_tid[rid] = t["id"]
+    token_lat: List[float] = []
+    t0 = time.monotonic()
+    while not engine.sched.done():
+        s0 = time.monotonic()
+        ev = engine.step()
+        dt = time.monotonic() - s0
+        emitted = len(ev["admitted"]) + len(ev["decoded"])
+        token_lat += [dt] * emitted
+        older = sorted(set(ev["decoded"]) - set(ev["admitted"]))
+        if ev["admitted"] and older:
+            log(f"[serve] step={engine.step_count - 1} "
+                f"admitted={[rid_to_tid[r] for r in ev['admitted']]} "
+                f"sharing decode with "
+                f"{[rid_to_tid[r] for r in older]}")
+        for rid in ev["finished"]:
+            n = len(engine.result(rid))
+            log(f"[serve] done id={rid_to_tid[rid]} tokens={n}")
+    wall = time.monotonic() - t0
+    results = {rid_to_tid[rid]: toks
+               for rid, toks in engine.drain().items()}
+    tokens = sum(len(v) for v in results.values())
+    return {
+        "results": results,
+        "wall_s": wall,
+        "tokens": tokens,
+        "tok_s": tokens / wall if wall > 0 else float("inf"),
+        "p50_ms": float(np.percentile(token_lat, 50) * 1e3),
+        "p99_ms": float(np.percentile(token_lat, 99) * 1e3),
+        "shared_steps": engine.stats["shared_steps"],
+        "decode_steps": engine.stats["decode_steps"],
+    }
 
 
 def main() -> None:
@@ -22,35 +123,95 @@ def main() -> None:
     ap.add_argument("--arch", type=str, default="qwen3_8b")
     ap.add_argument("--smoke", action="store_true", default=True)
     ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--batch_slots", type=int, default=4)
+    ap.add_argument("--batch_slots", type=int, default=4,
+                    help="KV slots (0 = resolve from the tuner)")
     ap.add_argument("--prompt_len", type=int, default=16)
     ap.add_argument("--max_new", type=int, default=24)
+    ap.add_argument("--stagger", type=int, default=3,
+                    help="arrival gap between requests, in engine steps")
+    ap.add_argument("--trace", type=str, default=None,
+                    help="JSONL trace file (overrides --requests/"
+                         "--prompt_len/--stagger)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--quantize", action="store_true",
+                    help="int8 weight-only quantization (the paper's "
+                         "multi-precision serving point)")
+    ap.add_argument("--mesh", type=str, default=None, metavar="D,M",
+                    help="install a (data, model) pack mesh")
+    ap.add_argument("--pack_min_flops", type=float, default=2.0 * 1024 ** 3)
+    ap.add_argument("--verify", action="store_true",
+                    help="check each request against a one-shot "
+                         "single-slot generate() (greedy only)")
     args = ap.parse_args()
+    if args.verify and args.temperature > 0.0:
+        raise SystemExit(
+            "--verify requires greedy decoding (temperature=0): the "
+            "sampling key folds in the slot index, which necessarily "
+            "differs between the continuous engine and the one-slot "
+            "verify engine")
+
+    import jax
+
+    from repro import configs as C
+    from repro.models import init_params
+    from repro.serving.engine import ServeConfig, ServeEngine
 
     cfg = C.get_smoke(args.arch) if args.smoke else C.get(args.arch)
     params = init_params(jax.random.PRNGKey(1), cfg)
+    if args.trace:
+        trace = load_trace(args.trace, cfg.vocab_size, seed=args.seed)
+    else:
+        trace = synth_trace(args.requests, args.prompt_len, args.max_new,
+                            args.stagger, cfg.vocab_size, seed=args.seed)
+    max_len = max(len(t["prompt"]) + t["max_new"] for t in trace) + 8
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import compat_make_mesh
+        d, m = (int(x) for x in args.mesh.split(","))
+        mesh = compat_make_mesh((d, m), ("data", "model"))
     engine = ServeEngine(cfg, params, ServeConfig(
-        batch_slots=args.batch_slots,
-        max_len=args.prompt_len + args.max_new + 8,
-        temperature=args.temperature, seed=args.seed))
+        batch_slots=args.batch_slots, max_len=max_len,
+        temperature=args.temperature, seed=args.seed,
+        quantize=args.quantize,
+        pack_mesh=mesh, pack_min_flops=args.pack_min_flops))
+    try:
+        rep = run_trace(engine, trace)
+        assert len(rep["results"]) == len(trace), \
+            f"only {len(rep['results'])}/{len(trace)} requests completed"
+        print(f"[serve] {rep['tokens']} tokens in {rep['wall_s']:.2f}s "
+              f"({rep['tok_s']:.1f} tok/s incl. compile) "
+              f"p50={rep['p50_ms']:.1f}ms p99={rep['p99_ms']:.1f}ms "
+              f"shared_steps={rep['shared_steps']} "
+              f"decode_steps={rep['decode_steps']} arch={cfg.name} "
+              f"slots={engine.scfg.batch_slots}")
+        if args.verify:
+            _verify(cfg, params, trace, rep["results"], engine.scfg)
+    finally:
+        engine.close()
 
-    rng = np.random.default_rng(args.seed)
-    n_batches = -(-args.requests // args.batch_slots)
-    total_tokens = 0
-    t0 = time.monotonic()
-    for b in range(n_batches):
-        prompts = rng.integers(0, cfg.vocab_size,
-                               size=(args.batch_slots, args.prompt_len)
-                               ).astype(np.int32)
-        out = engine.generate(prompts, max_new=args.max_new)
-        total_tokens += out.size
-        print(f"[serve] batch {b}: {out.shape[0]} requests x "
-              f"{out.shape[1]} new tokens; sample={out[0, :8].tolist()}")
-    dt = time.monotonic() - t0
-    print(f"[serve] {total_tokens} tokens in {dt:.2f}s "
-          f"({total_tokens/dt:.1f} tok/s incl. compile) arch={cfg.name}")
+
+def _verify(cfg, params, trace, results, scfg) -> None:
+    """Re-run every request one-shot (one slot, same kernels/pack
+    context) and compare with the continuous-batching outputs."""
+    import dataclasses
+
+    from repro.serving.engine import ServeConfig, ServeEngine
+    one = ServeEngine(cfg, params, dataclasses.replace(
+        scfg, batch_slots=1))
+    try:
+        bad = []
+        for t in trace:
+            want = one.generate(t["prompt"][None, :], t["max_new"])[0]
+            got = results[t["id"]]
+            if not np.array_equal(want, got):
+                bad.append(t["id"])
+        if bad:
+            raise SystemExit(f"[serve] VERIFY FAILED for ids {bad}")
+        print(f"[serve] verify OK: {len(trace)} requests bit-identical "
+              f"to one-shot generate()")
+    finally:
+        one.close()
 
 
 if __name__ == "__main__":

@@ -57,7 +57,7 @@ def attention(
     qk_norm: bool = False,
     causal: bool = True,
     cache: Optional[Params] = None,
-    cache_pos: Optional[jax.Array] = None,      # scalar write offset
+    cache_pos: Optional[jax.Array] = None,      # scalar or (B,) write offset
     kv_from: Optional[jax.Array] = None,        # encoder states (cross-attn)
     use_cached_kv: bool = False,                # decode-time cross attention
     attn_mode: str = "auto",
@@ -108,18 +108,37 @@ def attention(
     v = L.shard_hint(v.transpose(0, 2, 1, 3), "heads")
 
     new_cache = None
+    ragged = getattr(cache_pos, "ndim", 0) == 1   # per-slot positions
+    if ragged and s != 1:
+        raise NotImplementedError(
+            "per-slot cache_pos is a decode-only shape (S == 1); prefill "
+            "admits one request at a time at its own offset")
     if cache is not None:
-        pos = 0 if cache_pos is None else cache_pos
-        ck = jax.lax.dynamic_update_slice(
-            cache["k"], k.astype(cache["k"].dtype), (0, 0, pos, 0))
-        cv = jax.lax.dynamic_update_slice(
-            cache["v"], v.astype(cache["v"].dtype), (0, 0, pos, 0))
+        if ragged:
+            # Continuous batching: each slot writes its new KV row at its
+            # own position.  vmap over the batch axis so the update is a
+            # per-slot dynamic_update_slice, not one shared offset.
+            def _write(dst, upd, p):
+                return jax.lax.dynamic_update_slice(dst, upd, (0, p, 0))
+            ck = jax.vmap(_write)(cache["k"], k.astype(cache["k"].dtype),
+                                  cache_pos)
+            cv = jax.vmap(_write)(cache["v"], v.astype(cache["v"].dtype),
+                                  cache_pos)
+        else:
+            pos = 0 if cache_pos is None else cache_pos
+            ck = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, 0, pos, 0))
+            cv = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, 0, pos, 0))
         new_cache = {"k": ck, "v": cv}
         k, v = ck.astype(x.dtype), cv.astype(x.dtype)
 
     if s == 1 and cache is not None:
-        # Decode: one token against the cached prefix.
-        length = (cache_pos + 1) * jnp.ones((b,), jnp.int32)
+        # Decode: one token against the cached prefix.  With per-slot
+        # positions each slot's valid length differs — the decode kernel
+        # masks attention past each slot's own length.
+        length = jnp.broadcast_to(jnp.asarray(cache_pos, jnp.int32) + 1,
+                                  (b,))
         out = kops.decode(q[:, :, 0], k, v, length=length, mode=attn_mode)
         out = out[:, :, None]                       # (B, H, 1, D)
     else:

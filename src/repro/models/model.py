@@ -78,7 +78,12 @@ def _positions(batch: Batch, cfg: ModelConfig, s: int,
     if "positions" in batch:
         return batch["positions"]
     b = (batch.get("tokens", batch.get("embeds"))).shape[0]
-    pos = jnp.arange(s, dtype=jnp.int32)[None, :] + offset
+    off = jnp.asarray(offset, jnp.int32)
+    if off.ndim == 1:
+        # Per-slot decode offsets (continuous batching): each sequence
+        # in the batch sits at its own position in its KV cache.
+        off = off[:, None]
+    pos = jnp.arange(s, dtype=jnp.int32)[None, :] + off
     pos = jnp.broadcast_to(pos, (b, s))
     if cfg.mrope_sections is not None:
         pos = jnp.broadcast_to(pos[..., None], (b, s, 3))
@@ -171,7 +176,14 @@ def decode_step(params: Params, token: jax.Array, pos: jax.Array,
                 cfg: ModelConfig, caches: List,
                 embeds: Optional[jax.Array] = None
                 ) -> Tuple[jax.Array, List]:
-    """One token (B,) at position `pos` (scalar); returns (logits, caches)."""
+    """One token (B,) at position `pos`; returns (logits, caches).
+
+    ``pos`` is either a scalar (uniform batch — every sequence sits at
+    the same position, the one-shot ``generate`` shape) or a (B,) int32
+    vector of per-slot positions (ragged continuous batching: each slot
+    writes its KV at its own offset and attends only to its own valid
+    prefix).
+    """
     batch: Batch = {}
     if embeds is not None:
         batch["embeds"] = embeds[:, None]

@@ -1,9 +1,22 @@
-"""Batched serving engine: prefill + decode with slot-based batching.
+"""Continuous-batching serving engine: slot-based KV cache + scheduler.
 
-A fixed-size batch of request slots shares one KV cache allocation;
-finished slots are refilled from a queue (continuous-batching-lite).
-Prefill and decode are separately jitted — the two compiled programs are
-exactly the ``prefill_32k`` and ``decode_32k`` dry-run cells.
+One persistent KV-cache allocation (``batch_slots`` rows) lives for the
+engine's lifetime.  A :class:`~repro.serving.scheduler.Scheduler` admits
+queued requests into free slots *mid-decode*: an admission is prefilled
+into its slot (one request at a time, at its own offset) and joins the
+very next batched decode step alongside every older in-flight request —
+the serving analogue of the paper's staggered placement (keep every
+compute unit busy by offsetting work in time, Fig. 7).
+
+API: :meth:`ServeEngine.submit` queues a request, :meth:`step` runs one
+engine step (admissions + one batched decode), :meth:`drain` steps until
+idle and returns finished outputs.  The legacy one-shot
+:meth:`generate` is reimplemented on top of the same loop (all slots
+admitted at step 0) and stays numerics-identical for a uniform batch.
+
+Prefill and decode are separately jitted; the decode program takes a
+(B,) *per-slot* position vector so ragged batches write KV at their own
+offsets and attend only to their own valid prefixes.
 """
 
 from __future__ import annotations
@@ -15,13 +28,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models import decode_step, init_cache, prefill
+from repro.models import decode_step, forward, init_cache, prefill
 from repro.models.config import ModelConfig
+from repro.serving.scheduler import Request, Scheduler, Slot
 
 
 @dataclasses.dataclass
 class ServeConfig:
-    batch_slots: int = 8
+    batch_slots: int = 8      # KV-cache slots; 0 = resolve from the tuner
     max_len: int = 1024
     enc_len: int = 0          # encoder length for enc-dec models
     temperature: float = 0.0  # 0 = greedy
@@ -37,10 +51,13 @@ class ServeConfig:
     pack_min_flops: float = 2.0 * 1024 ** 3
 
 
-def model_gemm_shapes(cfg: ModelConfig, batch: int, seq: int
-                      ) -> List[tuple]:
+def model_gemm_shapes(cfg: ModelConfig, batch: int, seq: int,
+                      include_decode: bool = True) -> List[tuple]:
     """The (M, K, N) GEMMs a forward pass issues, for cache pre-warming:
-    prefill sees M = batch*seq tokens, decode M = batch.
+    prefill sees M = batch*seq tokens, decode M = batch
+    (``include_decode=False`` keeps only the prefill block — used when
+    warming per-slot prompt buckets, whose decode shape is the engine's
+    batch, not 1).
 
     This enumerates *GEMM sites*, not unique shapes: swiglu FFNs issue
     the up and gate projections separately (same (M, K, N) — the second
@@ -49,7 +66,7 @@ def model_gemm_shapes(cfg: ModelConfig, batch: int, seq: int
     """
     shapes = []
     qkv_n = (cfg.n_heads + 2 * cfg.n_kv_heads) * cfg.d_head
-    for m in (batch * seq, batch):
+    for m in ((batch * seq, batch) if include_decode else (batch * seq,)):
         shapes += [
             (m, cfg.d_model, qkv_n),                     # fused qkv proj
             (m, cfg.n_heads * cfg.d_head, cfg.d_model),  # out proj
@@ -61,8 +78,33 @@ def model_gemm_shapes(cfg: ModelConfig, batch: int, seq: int
     return shapes
 
 
+def prefill_buckets(max_len: int, lo: int = 8) -> List[int]:
+    """Power-of-two prompt buckets up to ``max_len``.  Per-slot prefill
+    pads each prompt to its bucket so the number of compiled prefill
+    programs is O(log max_len), not one per prompt length.
+
+    >>> prefill_buckets(64)
+    [8, 16, 32, 64]
+    >>> prefill_buckets(100)
+    [8, 16, 32, 64, 100]
+    """
+    out, b = [], lo
+    while b < max_len:
+        out.append(b)
+        b *= 2
+    out.append(max_len)
+    return out
+
+
+def _bucket_for(plen: int, max_len: int) -> int:
+    for b in prefill_buckets(max_len):
+        if plen <= b:
+            return b
+    raise ValueError(f"prompt of {plen} tokens exceeds max_len={max_len}")
+
+
 class ServeEngine:
-    """Slot-batched serving over the tuned kernel + pack dispatch stack.
+    """Continuous-batching engine over the tuned kernel + pack stack.
 
     ``ServeEngine(cfg, params, ServeConfig(...))`` pre-resolves every
     GEMM shape's kernel config (so jit tracing never searches), and —
@@ -72,8 +114,9 @@ class ServeEngine:
 
     The pack context is *process-global* (it is what ``kernels.ops``
     dispatches on), so run one packed engine at a time and call
-    :meth:`close` when done with it — otherwise later engines in the
-    same process would trace their GEMMs through this engine's mesh.
+    :meth:`close` when done with it.  ``close()`` is idempotent; any
+    serving call after it raises a clear ``RuntimeError`` instead of
+    tracing GEMMs through a torn-down (or another engine's) pack mesh.
     """
 
     def __init__(self, cfg: ModelConfig, params: Any, scfg: ServeConfig):
@@ -82,10 +125,28 @@ class ServeEngine:
             params, self.quant_stats = quantize_params(params)
         else:
             self.quant_stats = None
+        if scfg.batch_slots == 0:
+            # Tuned slot count (schema v4 `serve` op): measured best for
+            # this arch/workload when the cache has one, else the
+            # analytic default.
+            from repro.tuning import dispatch
+            scfg = dataclasses.replace(
+                scfg, batch_slots=dispatch.serve_slots(
+                    cfg, scfg.max_len, cfg.cdtype))
         self.cfg, self.params, self.scfg = cfg, params, scfg
+        # Recurrent mixers (mamba/rwkv, incl. the rwkv channel-mix FFN)
+        # thread state through *every* token, pad or not — a
+        # bucket-padded prompt would advance the state past the real
+        # prompt.  Those archs prefill at exact prompt length (one
+        # compiled program per distinct length); causal attention is
+        # immune, so attention-only archs keep the pow2 buckets.
+        self._exact_prefill = any(
+            spec.mixer != "attn" or spec.ffn == "rwkv_cm"
+            for spec in cfg.pattern)
         self.tuned_gemm_hits = 0
         self.packed_gemms = 0
         self._pack_ctx = None
+        self._closed = False
         if scfg.pack_mesh is not None:
             import repro.distributed.pack_gemm as pg
             from repro.tuning import dispatch
@@ -97,8 +158,7 @@ class ServeEngine:
             dsize = ctx.mesh.shape[ctx.data_axis] if ctx.data_axis else 1
             # Pre-resolve the pack grid of every GEMM that will route
             # through the pack path (cache hit or analytic KCE sweep).
-            for (m, k, n) in model_gemm_shapes(cfg, scfg.batch_slots,
-                                               scfg.max_len):
+            for (m, k, n) in self._all_gemm_shapes():
                 if ctx.eligible(m, k, n):
                     dispatch.pack_config(m, k, n, cfg.cdtype,
                                          data_axis=dsize,
@@ -113,52 +173,246 @@ class ServeEngine:
             # before the matmul.
             from repro.tuning import dispatch
             self.tuned_gemm_hits = dispatch.warm_gemm_shapes(
-                model_gemm_shapes(cfg, scfg.batch_slots, scfg.max_len),
-                cfg.cdtype)
+                self._all_gemm_shapes(), cfg.cdtype)
         self._prefill = jax.jit(
             lambda p, b, c: prefill(p, b, cfg, c))
+        # Full-logits prefill for per-slot admission: a ragged prompt is
+        # padded to its bucket, so the next-token logits live at
+        # position plen-1, not at the padded end.
+        self._prefill_full = jax.jit(
+            lambda p, b, c: forward(p, b, cfg, caches=c,
+                                    cache_pos=jnp.zeros((), jnp.int32))[:2])
         self._decode = jax.jit(
             lambda p, t, pos, c: decode_step(p, t, pos, cfg, c))
+        self._insert = jax.jit(self._insert_slot)
+        self._sample_slots = jax.jit(self._make_sampler())
+        # -- continuous-batching state (persistent across calls) ----------
+        self.sched = Scheduler(scfg.batch_slots)
+        self.caches = None            # allocated at first admission
+        self.step_count = 0
+        self._next_rid = 0
+        self._tok = np.zeros((scfg.batch_slots,), np.int32)
+        self._out: Dict[int, List[int]] = {}
+        self._finished: Dict[int, np.ndarray] = {}
+        self.stats = {"admitted": 0, "finished": 0, "prefills": 0,
+                      "decode_steps": 0, "shared_steps": 0}
+
+    # -- lifecycle ----------------------------------------------------------
 
     def close(self) -> None:
-        """Release this engine's pack context (no-op when unpacked or
-        when another engine has since installed its own)."""
+        """Release this engine's pack context and mark the engine
+        closed.  Idempotent: a second ``close()`` is a no-op (the pack
+        context is only released by whoever still owns it)."""
+        if self._closed:
+            return
+        self._closed = True
         if self._pack_ctx is not None:
             import repro.distributed.pack_gemm as pg
             if pg.get_pack_context() is self._pack_ctx:
                 pg.clear_pack_context()
             self._pack_ctx = None
 
+    @property
+    def closed(self) -> bool:
+        return self._closed
+
+    def _check_open(self, what: str) -> None:
+        if self._closed:
+            raise RuntimeError(
+                f"ServeEngine.{what}() on a closed engine — close() "
+                f"released the pack context, so serving would trace "
+                f"GEMMs through a torn-down (or another engine's) mesh; "
+                f"create a new engine instead")
+
+    # -- helpers ------------------------------------------------------------
+
+    def _all_gemm_shapes(self) -> List[tuple]:
+        """GEMM shapes the engine can issue: the uniform-batch legacy
+        shapes plus every per-slot prefill bucket (M = bucket)."""
+        shapes = model_gemm_shapes(self.cfg, self.scfg.batch_slots,
+                                   self.scfg.max_len)
+        if not self._exact_prefill:
+            for bucket in prefill_buckets(self.scfg.max_len):
+                shapes += model_gemm_shapes(self.cfg, 1, bucket,
+                                            include_decode=False)
+        return shapes
+
     def new_cache(self):
         return init_cache(self.cfg, self.scfg.batch_slots,
                           self.scfg.max_len, enc_len=self.scfg.enc_len)
 
+    def _insert_slot(self, full, one, slot):
+        """Overwrite slot ``slot`` of the persistent cache with a
+        freshly prefilled single-slot cache.  Replacing the whole row
+        (KV *and* recurrent state) is what makes slot reuse leak-free:
+        nothing from the previous occupant survives."""
+        def upd(f, o):
+            start = (0, slot) + (0,) * (f.ndim - 2)
+            return jax.lax.dynamic_update_slice(f, o.astype(f.dtype), start)
+        return jax.tree.map(upd, full, one)
+
+    def _make_sampler(self):
+        temp = self.scfg.temperature
+        base = jax.random.PRNGKey(self.scfg.seed)
+        slot_ids = jnp.arange(self.scfg.batch_slots)
+
+        def sample(logits, token_idx):
+            if temp <= 0.0:
+                return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+            def one(lg, sid, tid):
+                key = jax.random.fold_in(jax.random.fold_in(base, sid), tid)
+                return jax.random.categorical(key, lg / temp)
+            return jax.vmap(one)(logits, slot_ids,
+                                 token_idx).astype(jnp.int32)
+        return sample
+
+    # -- continuous-batching API --------------------------------------------
+
+    def submit(self, prompt: np.ndarray, max_new: int, *,
+               arrival: Optional[int] = None,
+               enc_embeds: Optional[np.ndarray] = None) -> int:
+        """Queue one request; returns its request id.  ``arrival`` (in
+        engine steps) defaults to "now" — pass a later step to replay a
+        timed trace deterministically."""
+        self._check_open("submit")
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if prompt.size == 0:
+            raise ValueError("empty prompt")
+        if max_new < 1:
+            raise ValueError(f"max_new must be >= 1, got {max_new}")
+        if prompt.size + max_new > self.scfg.max_len:
+            raise ValueError(
+                f"prompt ({prompt.size}) + max_new ({max_new}) exceeds "
+                f"max_len={self.scfg.max_len}")
+        rid = self._next_rid
+        self._next_rid += 1
+        self.sched.submit(Request(
+            rid=rid, prompt_len=int(prompt.size), max_new=int(max_new),
+            arrival=self.step_count if arrival is None else int(arrival),
+            prompt=prompt, enc_embeds=enc_embeds))
+        return rid
+
+    def step(self) -> Dict[str, List[int]]:
+        """One engine step: admit arrived requests into free slots
+        (prefill each at its own offset), then run one batched decode
+        over every active slot with per-slot positions.  Returns the
+        step's events ({admitted, decoded, finished} request ids)."""
+        self._check_open("step")
+        if self.caches is None:
+            self.caches = self.new_cache()
+        holdover = [s.rid for s in self.sched.active_slots()]
+        events: Dict[str, List[int]] = {"admitted": [], "decoded": [],
+                                        "finished": []}
+        for req in self.sched.pop_admissible(self.step_count):
+            slot = self.sched.admit(req)
+            tok0 = self._prefill_slot(slot, req)
+            self.stats["admitted"] += 1
+            events["admitted"].append(req.rid)
+            self._emit(slot, tok0, events)
+        active = self.sched.active_slots()
+        if active:
+            pos = np.zeros((self.scfg.batch_slots,), np.int32)
+            for s in self.sched.slots:
+                # Inactive slots decode garbage into their own (dead)
+                # rows; re-admission replaces the whole row, so the
+                # clamp only guards the cache bound.
+                pos[s.index] = min(s.length, self.scfg.max_len - 1)
+            token_idx = np.zeros((self.scfg.batch_slots,), np.int32)
+            for s in active:
+                token_idx[s.index] = s.generated
+            logits, self.caches = self._decode(
+                self.params, jnp.asarray(self._tok), jnp.asarray(pos),
+                self.caches)
+            toks = np.asarray(self._sample_slots(logits,
+                                                 jnp.asarray(token_idx)))
+            self.stats["decode_steps"] += 1
+            if events["admitted"] and holdover:
+                # A mid-stream admission shared this decode step with
+                # older in-flight requests — the utilization win
+                # continuous batching exists for.
+                self.stats["shared_steps"] += 1
+            for s in active:
+                s.length += 1
+                self._tok[s.index] = toks[s.index]
+                events["decoded"].append(s.rid)
+                self._emit(s, int(toks[s.index]), events)
+        self.step_count += 1
+        return events
+
+    def drain(self) -> Dict[int, np.ndarray]:
+        """Step until the queue and all slots are empty; returns (and
+        clears) every finished request's tokens, keyed by request id."""
+        self._check_open("drain")
+        while not self.sched.done():
+            self.step()
+        out, self._finished = self._finished, {}
+        return out
+
+    def result(self, rid: int) -> Optional[np.ndarray]:
+        """Finished tokens for ``rid`` (None while still in flight)."""
+        return self._finished.get(rid)
+
+    def _emit(self, slot: Slot, tok: int, events: Dict[str, List[int]]
+              ) -> None:
+        self._out.setdefault(slot.rid, []).append(int(tok))
+        slot.generated += 1
+        if slot.generated >= slot.max_new:
+            rid = slot.rid
+            self._finished[rid] = np.asarray(self._out.pop(rid), np.int32)
+            self.stats["finished"] += 1
+            events["finished"].append(rid)
+            self.sched.release(slot)
+
+    def _prefill_slot(self, slot: Slot, req: Request) -> int:
+        """Prefill one admission into its slot: pad the prompt to its
+        bucket, run it against a *fresh* single-slot cache (zero
+        recurrent state, zero KV — no leakage from the previous
+        occupant), insert the result at the slot index, and return the
+        first generated token (greedy from the prompt's last-position
+        logits, exactly the legacy generate() seed token)."""
+        plen = req.prompt_len
+        bucket = (plen if self._exact_prefill
+                  else _bucket_for(plen, self.scfg.max_len))
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, :plen] = req.prompt
+        batch: Dict[str, jax.Array] = {"tokens": jnp.asarray(toks)}
+        if req.enc_embeds is not None:
+            batch["enc_embeds"] = jnp.asarray(req.enc_embeds)
+        fresh = init_cache(self.cfg, 1, self.scfg.max_len,
+                           enc_len=self.scfg.enc_len)
+        logits, one = self._prefill_full(self.params, batch, fresh)
+        self.caches = self._insert(self.caches, one,
+                                   jnp.asarray(slot.index, jnp.int32))
+        self.stats["prefills"] += 1
+        slot.length = plen
+        tok0 = int(np.asarray(jnp.argmax(logits[0, plen - 1])))
+        self._tok[slot.index] = tok0
+        return tok0
+
+    # -- legacy one-shot API (reimplemented on the continuous loop) ---------
+
     def generate(self, prompts: np.ndarray, max_new: int,
                  enc_embeds: Optional[np.ndarray] = None
                  ) -> np.ndarray:
-        """prompts: (B, S) int32 (B == batch_slots); returns (B, max_new)."""
+        """prompts: (B, S) int32 (B == batch_slots); returns (B, max_new).
+
+        All B requests are admitted at the same step and decode in
+        lockstep — the uniform-batch special case of the continuous
+        loop, numerics-identical to the historical one-shot engine for
+        greedy decoding (row i never sees any other row's state).
+        """
+        self._check_open("generate")
         b, s = prompts.shape
         assert b == self.scfg.batch_slots
-        caches = self.new_cache()
-        batch: Dict[str, jax.Array] = {"tokens": jnp.asarray(prompts)}
-        if enc_embeds is not None:
-            batch["enc_embeds"] = jnp.asarray(enc_embeds)
-        logits, caches = self._prefill(self.params, batch, caches)
-        out = np.zeros((b, max_new), np.int32)
-        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        # Deterministic sampling stream: one key per generate() call,
-        # folded per decode step — no host RNG, no host round-trip, and
-        # identical outputs for identical (seed, prompts, max_new).
-        key = jax.random.PRNGKey(self.scfg.seed)
-        for i in range(max_new):
-            out[:, i] = np.asarray(tok)
-            logits, caches = self._decode(self.params, tok,
-                                          jnp.asarray(s + i), caches)
-            tok = self._sample(logits, jax.random.fold_in(key, i))
-        return out
-
-    def _sample(self, logits: jax.Array, key: jax.Array) -> jax.Array:
-        if self.scfg.temperature <= 0.0:
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        return jax.random.categorical(
-            key, logits / self.scfg.temperature, axis=-1).astype(jnp.int32)
+        if not self.sched.done():
+            raise RuntimeError(
+                "generate() needs an idle engine; drain() in-flight "
+                "requests first (or use submit()/step() throughout)")
+        rids = []
+        for i in range(b):
+            ee = None if enc_embeds is None else \
+                np.asarray(enc_embeds[i:i + 1])
+            rids.append(self.submit(prompts[i], max_new, enc_embeds=ee))
+        res = self.drain()
+        return np.stack([res[r] for r in rids])

@@ -1,0 +1,146 @@
+"""Continuous-batching scheduler: a request queue over a fixed slot pool.
+
+The engine owns one persistent KV-cache allocation with
+``batch_slots`` rows ("slots"); the scheduler decides which request
+occupies which slot at every engine step.  This is the serving-side
+analogue of the paper's staggered placement (Fig. 7): instead of
+starting a whole batch together and idling finished rows until the
+slowest one drains, requests are admitted the moment a slot frees up,
+so every cache row stays busy.
+
+Slot lifecycle::
+
+    FREE ──admit()──► PREFILL ──(same step)──► DECODE ──release()──► FREE
+      ▲                                                                │
+      └────────────────────── slot reused ◄────────────────────────────┘
+
+``PREFILL`` is transient: the engine prefills an admission and joins it
+to the very next decode step, so a newly admitted request *shares* that
+step with every older in-flight request.  The scheduler is pure host
+bookkeeping — it never touches jax — which keeps admission decisions
+out of the compiled hot path.
+
+>>> s = Scheduler(2)
+>>> s.submit(Request(rid=0, prompt_len=4, max_new=2))
+0
+>>> s.submit(Request(rid=1, prompt_len=3, max_new=2, arrival=5))
+1
+>>> [r.rid for r in s.admissible(step=0)]   # rid 1 hasn't arrived yet
+[0]
+>>> slot = s.admit(s.pop_admissible(step=0)[0])
+>>> (slot.index, slot.state, s.free_slots())
+(0, 'decode', 1)
+>>> s.release(slot); (slot.state, s.free_slots(), s.done())
+('free', 2, False)
+>>> s.pop_admissible(step=5)[0].rid and s.done()
+True
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Optional
+
+FREE = "free"
+PREFILL = "prefill"
+DECODE = "decode"
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request.
+
+    ``arrival`` is the earliest engine step at which the request may be
+    admitted (trace replay measures arrival in decode steps so runs are
+    deterministic; live serving would use wall clock).
+    """
+
+    rid: int
+    prompt_len: int
+    max_new: int
+    arrival: int = 0
+    prompt: Any = None          # (prompt_len,) int32, owned by the engine
+    enc_embeds: Any = None      # (1, S_enc, d_model) for enc-dec archs
+
+
+@dataclasses.dataclass
+class Slot:
+    """Per-slot state surviving across engine steps: which request the
+    slot holds, how many KV rows of the persistent cache are valid
+    (``length``), and how many tokens it has produced."""
+
+    index: int
+    state: str = FREE
+    rid: Optional[int] = None
+    length: int = 0             # valid KV prefix in this slot's cache row
+    generated: int = 0
+    max_new: int = 0
+
+
+class Scheduler:
+    """FIFO admission of queued requests into free slots.
+
+    Requests become admissible once ``arrival <= step``; among
+    admissible requests, submission order wins (FIFO — no starvation).
+    """
+
+    def __init__(self, n_slots: int):
+        if n_slots < 1:
+            raise ValueError(f"need at least one slot, got {n_slots}")
+        self.slots: List[Slot] = [Slot(index=i) for i in range(n_slots)]
+        self.queue: List[Request] = []
+
+    # -- queue --------------------------------------------------------------
+
+    def submit(self, req: Request) -> int:
+        self.queue.append(req)
+        return req.rid
+
+    def admissible(self, step: int) -> List[Request]:
+        """Arrived requests that would fit in the currently free slots
+        (FIFO prefix — does not pop)."""
+        free = self.free_slots()
+        out = [r for r in self.queue if r.arrival <= step]
+        return out[:free]
+
+    def pop_admissible(self, step: int) -> List[Request]:
+        """Remove and return the requests :meth:`admissible` selects."""
+        picked = self.admissible(step)
+        for r in picked:
+            self.queue.remove(r)
+        return picked
+
+    # -- slots --------------------------------------------------------------
+
+    def free_slots(self) -> int:
+        return sum(1 for s in self.slots if s.state == FREE)
+
+    def active_slots(self) -> List[Slot]:
+        return [s for s in self.slots if s.state == DECODE]
+
+    def admit(self, req: Request) -> Slot:
+        """Bind ``req`` to the lowest-index free slot.  The engine
+        prefills it immediately, so the slot lands in DECODE state."""
+        for slot in self.slots:
+            if slot.state == FREE:
+                slot.state = DECODE
+                slot.rid = req.rid
+                slot.length = req.prompt_len
+                slot.generated = 0
+                slot.max_new = req.max_new
+                return slot
+        raise RuntimeError("admit() with no free slot — call "
+                           "admissible() first")
+
+    def release(self, slot: Slot) -> None:
+        """Evict a finished (or cancelled) request; the slot's stale KV
+        is left in place — re-admission overwrites the whole cache row
+        and length masking hides anything beyond the new prefix."""
+        slot.state = FREE
+        slot.rid = None
+        slot.generated = 0
+        slot.max_new = 0
+
+    def done(self) -> bool:
+        """True when nothing is queued and nothing is in flight."""
+        return not self.queue and not self.active_slots()

@@ -24,6 +24,11 @@ Schema history (see docs/TUNING.md for the full notes):
   fallback entries (``"analytic": true``) are re-measured — treated as
   misses by ``tune_pack`` — once the host exposes enough devices.  v2
   files are discarded wholesale on load.
+* **v4** — new op ``serve``: the continuous-batching engine's
+  ``batch_slots`` (KV-cache slot count), measured end to end through a
+  staggered-arrival trace on ``ServeEngine`` (tokens/s, stored as
+  us-per-token).  Keyed per arch + max_len, not per GEMM shape.  v3
+  files are discarded wholesale on load.
 """
 
 from __future__ import annotations
@@ -34,7 +39,7 @@ import tempfile
 from pathlib import Path
 from typing import Any, Dict, Optional
 
-SCHEMA_VERSION = 3
+SCHEMA_VERSION = 4
 
 _ENV_VAR = "REPRO_TUNING_CACHE"
 

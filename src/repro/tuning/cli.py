@@ -17,6 +17,12 @@ Examples (full walkthrough in docs/TUNING.md)::
     python -m repro.tuning.cli tune --op decode --shape 4096,128
     python -m repro.tuning.cli tune --op wkv --shape 1024,64
 
+    # Continuous-batching slot count (schema v4): measured end to end
+    # through ServeEngine on a staggered trace of the arch's smoke
+    # config; --shape is prompt_len,max_new.
+    python -m repro.tuning.cli tune --op serve --arch smollm_360m \\
+        --shape 8,8 --keep 2 --reps 1
+
     # Inspect / wipe the persistent cache.
     python -m repro.tuning.cli show
     python -m repro.tuning.cli clear
@@ -82,6 +88,15 @@ def cmd_tune(args) -> int:
         res = dispatch.tune_wkv(t, n, args.dtype, keep=args.keep,
                                 warmup=args.warmup, reps=args.reps,
                                 force=args.force, cache=tc)
+    elif args.op == "serve":
+        from repro import configs as C
+        plen, max_new = _parse_shape(args.shape, 2)
+        cfg = C.get_smoke(args.arch)
+        res = dispatch.tune_serve(cfg, max_len=plen + max_new + 8,
+                                  prompt_len=plen, max_new=max_new,
+                                  keep=args.keep, warmup=args.warmup,
+                                  reps=args.reps, force=args.force,
+                                  cache=tc)
     else:  # pragma: no cover - argparse choices guard this
         raise SystemExit(f"unknown op {args.op!r}")
 
@@ -138,11 +153,14 @@ def build_parser() -> argparse.ArgumentParser:
 
     t = sub.add_parser("tune", help="tune one op/shape and persist the best")
     t.add_argument("--op",
-                   choices=("gemm", "attention", "pack", "decode", "wkv"),
+                   choices=("gemm", "attention", "pack", "decode", "wkv",
+                            "serve"),
                    default="gemm")
     t.add_argument("--shape", required=True,
                    help="gemm/pack: M,N,K; attention: Sq,Sk,D; "
-                        "decode: Sk,D; wkv: T,N")
+                        "decode: Sk,D; wkv: T,N; serve: plen,max_new")
+    t.add_argument("--arch", default="smollm_360m",
+                   help="serve: arch whose smoke config drives the trace")
     t.add_argument("--dtype", default="bf16")
     t.add_argument("--mesh", default="1,1",
                    help="pack: data_axis,model_axis")

@@ -22,7 +22,7 @@ from repro.tuning import prior
 from repro.tuning.cache import TuningCache, cache_key
 from repro.tuning.space import (AttentionCandidate, DecodeCandidate,
                                 DesignSpace, GemmCandidate, PackCandidate,
-                                WkvCandidate)
+                                ServeCandidate, WkvCandidate)
 
 # Canonical dtype spellings accepted by the CLI / config files.
 _DTYPE_ALIASES = {
@@ -202,6 +202,32 @@ def wkv_chunk(t: int, n: int, dtype) -> int:
         chunk = prior.analytic_wkv(t, n).chunk
     _MEMO[key] = chunk
     return chunk
+
+
+def _serve_key(cfg, max_len: int, dt: str, backend: str, kind: str) -> str:
+    """Cache key for the serving slot count: the arch (name + width +
+    vocab identify the compiled programs) and the cache length are the
+    workload; GEMM shape slots carry (d_model, vocab, max_len)."""
+    return cache_key("serve", cfg.d_model, cfg.vocab_size, max_len, dt,
+                     backend, kind, extra=f"arch{cfg.name}")
+
+
+def serve_slots(cfg, max_len: int, dtype) -> int:
+    """Best-known continuous-batching slot count for this arch/workload
+    (schema v4), falling back to the engine's historical default of 8."""
+    dt = canonical_dtype(dtype)
+    backend, kind = backend_fingerprint()
+    key = _serve_key(cfg, max_len, dt, backend, kind)
+    hit = _MEMO.get(key)
+    if hit is not None:
+        return hit  # type: ignore[return-value]
+    entry = get_cache().get(key)
+    if entry is not None and "config" in entry:
+        slots = ServeCandidate.from_json(entry["config"]).slots
+    else:
+        slots = prior.analytic_serve(max_len).slots
+    _MEMO[key] = slots
+    return slots
 
 
 def warm_gemm_shapes(shapes: Sequence[Tuple[int, int, int]], dtype) -> int:
@@ -418,6 +444,37 @@ def tune_decode(sk: int, d: int, dtype="float32", *, keep: int = 4,
         key, tc, survivors,
         lambda c: runner.time_decode(c, sk, d, dt, warmup=warmup,
                                      reps=reps),
+        space_size=len(space))
+
+
+def tune_serve(cfg, *, max_len: int = 64, prompt_len: int = 8,
+               max_new: int = 8, requests: Optional[int] = None,
+               stagger: int = 2, keep: int = 3, warmup: int = 0,
+               reps: int = 1, force: bool = False,
+               cache: Optional[TuningCache] = None) -> TuneResult:
+    """Tune the continuous-batching slot count (schema v4 ``serve`` op)
+    for one model config: each surviving candidate runs a full
+    staggered-arrival trace through ``ServeEngine`` and is scored on
+    measured us-per-token (i.e. tokens/s), with completeness as the
+    numerics gate.  ``cfg`` is a ``ModelConfig`` (use the smoke config
+    of an arch — the tunable transfers by keying on arch + max_len)."""
+    from repro.tuning import runner
+    dt = canonical_dtype(cfg.cdtype)
+    backend, kind = backend_fingerprint()
+    key = _serve_key(cfg, max_len, dt, backend, kind)
+    tc = cache if cache is not None else get_cache()
+    hit = _cached_result(key, tc, force)
+    if hit is not None:
+        return hit
+    space = DesignSpace.serve()
+    survivors = prior.prune_serve(space, max_len, keep=keep)
+    return _measure_and_store(
+        key, tc, survivors,
+        lambda c: runner.time_serve(c, cfg, max_len=max_len,
+                                    prompt_len=prompt_len,
+                                    max_new=max_new, requests=requests,
+                                    stagger=stagger, warmup=warmup,
+                                    reps=reps),
         space_size=len(space))
 
 

@@ -17,7 +17,7 @@ from repro.core.tile_search import (search_tpu_tiles, tile_gamma,
                                     tile_vmem_bytes)
 from repro.tuning.space import (AttentionCandidate, DecodeCandidate,
                                 DesignSpace, GemmCandidate, PackCandidate,
-                                WkvCandidate)
+                                ServeCandidate, WkvCandidate)
 
 
 def precision_for(dtype_name: str) -> hw.Precision:
@@ -224,3 +224,36 @@ def prune_wkv(candidates: Sequence[WkvCandidate], t: int, n: int,
 def analytic_wkv(t: int, n: int) -> WkvCandidate:
     """Cache-miss fallback: the seed kernel's default chunk."""
     return WkvCandidate(chunk=128)
+
+
+# ---------------------------------------------------------------------------
+# Serving (continuous-batching slot count)
+# ---------------------------------------------------------------------------
+
+# Modeled fixed cost of one batched decode step, in per-token units: the
+# jit dispatch / host round-trip / sampling overhead that slots amortize.
+# Calibration of this constant is exactly what tune_serve measures.
+SERVE_STEP_OVERHEAD = 8.0
+
+
+def serve_score(c: ServeCandidate, max_len: int) -> Tuple:
+    """Sort key, higher = better.  Primary: modeled steady-state tokens
+    per step-second — slots amortize the fixed per-step cost, with
+    diminishing returns once per-token work dominates.  Tiebreak: fewer
+    slots (each extra slot adds per-token latency and KV footprint
+    ``slots * max_len`` without throughput to show for it)."""
+    thpt = c.slots / (SERVE_STEP_OVERHEAD + c.slots)
+    return (round(thpt * 1e6), -c.slots)
+
+
+def prune_serve(candidates: Sequence[ServeCandidate], max_len: int,
+                keep: int = 3) -> List[ServeCandidate]:
+    ranked = sorted(candidates, key=lambda c: serve_score(c, max_len),
+                    reverse=True)
+    return ranked[:max(1, keep)]
+
+
+def analytic_serve(max_len: int) -> ServeCandidate:
+    """Cache-miss fallback: the engine's historical default slot count
+    (``ServeConfig.batch_slots = 8``) — untuned behavior is unchanged."""
+    return ServeCandidate(slots=8)

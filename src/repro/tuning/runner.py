@@ -17,7 +17,8 @@ from typing import Callable, List, Optional
 import numpy as np
 
 from repro.tuning.space import (AttentionCandidate, DecodeCandidate,
-                                GemmCandidate, PackCandidate, WkvCandidate)
+                                GemmCandidate, PackCandidate,
+                                ServeCandidate, WkvCandidate)
 
 
 @dataclasses.dataclass
@@ -224,6 +225,54 @@ def time_wkv(cand: WkvCandidate, t: int, n: int,
                               - want.astype(np.float64))))
     return Measurement(us=robust_us(samples), samples_us=samples,
                        max_err=err, ok=err <= atol)
+
+
+def time_serve(cand: ServeCandidate, cfg, max_len: Optional[int] = None,
+               prompt_len: int = 8, max_new: int = 8,
+               requests: Optional[int] = None,
+               stagger: int = 2, warmup: int = 0,
+               reps: int = 1) -> Measurement:
+    """Time one slot-count candidate end to end through ``ServeEngine``
+    on a staggered-arrival trace (requests arriving every ``stagger``
+    decode steps — the continuous-batching workload, not a lockstep
+    batch).  ``max_len`` is the engine's KV length — the same value the
+    cache entry is keyed under, so the measurement runs exactly the
+    workload the key names.  ``us`` is per *generated token*, so
+    candidates with different slot counts compare on throughput.  The
+    numerics gate checks completeness: every request finished with
+    exactly ``max_new`` tokens."""
+    import jax
+
+    from repro.models import init_params
+    from repro.serving.engine import ServeConfig, ServeEngine
+    if max_len is None:
+        max_len = prompt_len + max_new + 8
+    if prompt_len + max_new > max_len:
+        raise ValueError(f"prompt_len + max_new exceeds max_len="
+                         f"{max_len}")
+    n_req = requests if requests is not None else max(4, 2 * cand.slots)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    engine = ServeEngine(cfg, params, ServeConfig(
+        batch_slots=cand.slots, max_len=max_len, pretune=False))
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab_size,
+                           size=(n_req, prompt_len)).astype(np.int32)
+    last: dict = {}
+
+    def run():
+        base = engine.step_count
+        for i in range(n_req):
+            engine.submit(prompts[i], max_new, arrival=base + i * stagger)
+        last.clear()
+        last.update(engine.drain())
+        return last
+
+    samples = measure_fn(run, warmup=warmup, reps=reps)
+    per_tok = [s / (n_req * max_new) for s in samples]
+    ok = (len(last) == n_req
+          and all(len(v) == max_new for v in last.values()))
+    return Measurement(us=robust_us(per_tok), samples_us=per_tok,
+                       max_err=0.0, ok=ok)
 
 
 def pick_best(cands: List, results: List[Measurement]

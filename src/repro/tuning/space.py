@@ -105,6 +105,21 @@ class WkvCandidate:
 
 
 @dataclasses.dataclass(frozen=True)
+class ServeCandidate:
+    """Slot count of the continuous-batching engine's persistent KV
+    cache (schema v4): how many requests decode per batched step."""
+
+    slots: int
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_json(cls, d: dict) -> "ServeCandidate":
+        return cls(slots=int(d["slots"]))
+
+
+@dataclasses.dataclass(frozen=True)
 class AttentionCandidate:
     """One point of the flash-attention design space."""
 
@@ -233,6 +248,22 @@ class DesignSpace:
         blocks = {bk for bk in cls.DECODE_BLOCKS if bk <= bk_max}
         blocks.add(min(512, bk_max))
         return [DecodeCandidate(bk=bk) for bk in sorted(blocks)]
+
+    SERVE_SLOTS: Sequence[int] = (1, 2, 4, 8, 16, 32)
+
+    @classmethod
+    def serve(cls, max_slots: int = 32) -> List["ServeCandidate"]:
+        """Slot counts for the continuous-batching engine: powers of two
+        up to ``max_slots``.  Always includes the engine's untuned
+        default (8 slots) so tuning can never regress below the
+        fallback.
+
+        >>> [c.slots for c in DesignSpace.serve(max_slots=4)]
+        [1, 2, 4, 8]
+        """
+        slots = {s for s in cls.SERVE_SLOTS if s <= max(max_slots, 1)}
+        slots.add(8)
+        return [ServeCandidate(slots=s) for s in sorted(slots)]
 
     @classmethod
     def wkv(cls, t: int, n: int) -> List["WkvCandidate"]:

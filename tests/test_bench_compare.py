@@ -1,0 +1,120 @@
+"""tools/bench_compare.py — the CI perf-regression gate.  The BENCH
+trajectory is asserted via *within-run schedule ratios* (machine noise
+divides out); a deliberately degraded candidate JSON must exit nonzero."""
+
+import copy
+import json
+import os
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "tools"))
+
+import bench_compare  # noqa: E402  (tools/bench_compare.py)
+
+BASE = {
+    "schema": 1,
+    "level": "pack",
+    "rows": [
+        {"name": "pack.gemm.p2q4.ring", "us_per_call": 100.0,
+         "derived": ""},
+        {"name": "pack.gemm.p2q4.psum", "us_per_call": 110.0,
+         "derived": ""},
+        {"name": "pack.gemm.p2q4.overlap", "us_per_call": 90.0,
+         "derived": ""},
+        {"name": "pack.tune.cache", "us_per_call": 0.0, "derived": ""},
+    ],
+}
+
+
+def _write(tmp_path, name, payload):
+    p = tmp_path / name
+    p.write_text(json.dumps(payload))
+    return str(p)
+
+
+def _degraded(factor, row="pack.gemm.p2q4.overlap"):
+    cand = copy.deepcopy(BASE)
+    for r in cand["rows"]:
+        if r["name"] == row:
+            r["us_per_call"] *= factor
+    return cand
+
+
+def test_identical_passes(tmp_path):
+    b = _write(tmp_path, "base.json", BASE)
+    assert bench_compare.main([b, b]) == bench_compare.OK
+
+
+def test_uniform_machine_slowdown_passes(tmp_path):
+    """3x slower machine, same schedule ratios: not a regression."""
+    cand = copy.deepcopy(BASE)
+    for r in cand["rows"]:
+        r["us_per_call"] *= 3.0
+    b = _write(tmp_path, "base.json", BASE)
+    c = _write(tmp_path, "cand.json", cand)
+    assert bench_compare.main([b, c]) == bench_compare.OK
+
+
+def test_degraded_overlap_ratio_fails(tmp_path):
+    """Overlap slowing 3x *relative to ring* (ring unchanged) is a real
+    schedule regression — must exit nonzero."""
+    b = _write(tmp_path, "base.json", BASE)
+    c = _write(tmp_path, "cand.json", _degraded(3.0))
+    assert bench_compare.main([b, c]) == bench_compare.REGRESSION
+
+
+def test_small_jitter_passes(tmp_path):
+    b = _write(tmp_path, "base.json", BASE)
+    c = _write(tmp_path, "cand.json", _degraded(1.8))
+    assert bench_compare.main([b, c, "--tolerance", "2.5"]) \
+        == bench_compare.OK
+
+
+def test_missing_row_is_structural(tmp_path):
+    cand = copy.deepcopy(BASE)
+    cand["rows"] = [r for r in cand["rows"]
+                    if r["name"] != "pack.gemm.p2q4.overlap"]
+    b = _write(tmp_path, "base.json", BASE)
+    c = _write(tmp_path, "cand.json", cand)
+    assert bench_compare.main([b, c]) == bench_compare.STRUCTURAL
+
+
+def test_missing_reference_row_is_structural(tmp_path):
+    b = _write(tmp_path, "base.json", BASE)
+    assert bench_compare.main([b, b, "--ref", "no.such.row"]) \
+        == bench_compare.STRUCTURAL
+
+
+def test_unreadable_candidate_is_structural(tmp_path):
+    b = _write(tmp_path, "base.json", BASE)
+    bad = _write(tmp_path, "bad.json", {"nope": True})
+    assert bench_compare.main([b, bad]) == bench_compare.STRUCTURAL
+    assert bench_compare.main([b, str(tmp_path / "absent.json")]) \
+        == bench_compare.STRUCTURAL
+
+
+def test_filter_restricts_gate(tmp_path):
+    """--filter gates only matching rows: degrade a tune row, gate only
+    pack.gemm — passes; gate everything — fails."""
+    base = copy.deepcopy(BASE)
+    base["rows"].append({"name": "pack.tune.pack_grid",
+                         "us_per_call": 500.0, "derived": ""})
+    cand = copy.deepcopy(base)
+    for r in cand["rows"]:
+        if r["name"] == "pack.tune.pack_grid":
+            r["us_per_call"] *= 10.0
+    b = _write(tmp_path, "base.json", base)
+    c = _write(tmp_path, "cand.json", cand)
+    assert bench_compare.main([b, c, "--filter", "pack.gemm"]) \
+        == bench_compare.OK
+    assert bench_compare.main([b, c]) == bench_compare.REGRESSION
+
+
+def test_zero_cost_info_rows_ignored(tmp_path):
+    """us_per_call == 0 rows (cache summaries) are info, not timings."""
+    rows = bench_compare.load_rows(_write(tmp_path, "b.json", BASE))
+    assert "pack.tune.cache" not in rows
+    assert len(rows) == 3

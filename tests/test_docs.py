@@ -14,6 +14,9 @@ sys.path.insert(0, os.path.join(REPO, "tools"))
 
 import check_links  # noqa: E402  (tools/check_links.py)
 
+# CI runs the docs-health suite in its own step (pytest -m docs).
+pytestmark = pytest.mark.docs
+
 # Modules whose docstrings carry runnable >>> examples.  Keep these
 # cheap: pure-python helpers only, no kernel launches.
 DOCTEST_MODULES = [
@@ -22,6 +25,8 @@ DOCTEST_MODULES = [
     "repro.tuning.dispatch",
     "repro.distributed.cascade",
     "repro.distributed.pack_gemm",
+    "repro.serving.scheduler",
+    "repro.serving.engine",
 ]
 
 
@@ -30,7 +35,8 @@ def test_readme_and_docs_links_resolve():
                                   os.path.join(REPO, "docs")])
     assert files, "README.md / docs/ not found"
     names = {f.name for f in files}
-    assert {"README.md", "ARCHITECTURE.md", "TUNING.md"} <= names
+    assert {"README.md", "ARCHITECTURE.md", "TUNING.md",
+            "SERVING.md"} <= names
     bad = {str(f): check_links.broken_links(f) for f in files}
     bad = {f: links for f, links in bad.items() if links}
     assert not bad, f"broken markdown links: {bad}"

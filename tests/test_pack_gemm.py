@@ -16,6 +16,10 @@ from repro.tuning.space import (DecodeCandidate, DesignSpace,
                                 PackCandidate, WkvCandidate)
 from repro.tuning.cache import cache_key
 
+# CI runs this suite in its own step (pytest -m multidevice): the
+# subprocess 8-device mesh cases dominate the suite's wall time.
+pytestmark = pytest.mark.multidevice
+
 
 def test_multidevice_pack_suite():
     """pack_gemm/array_gemm vs the reference GEMM on an 8-device mesh

@@ -1,0 +1,130 @@
+#!/usr/bin/env python3
+"""Perf-regression gate: compare a fresh benchmark JSON against the
+committed snapshot.
+
+CI runners are noisy shared machines, so absolute microseconds are not
+comparable across runs.  What *is* stable is the **ratio between rows
+of the same run** — e.g. the overlap schedule vs the sequential ring:
+both rows see the same machine, so scheduler noise divides out.  This
+tool normalizes every timed row by a reference row *within its own
+file* and fails when a candidate row's normalized time exceeds the
+baseline's by more than ``--tolerance`` (default 2.5x — a real schedule
+regression, not jitter).
+
+Usage::
+
+    python tools/bench_compare.py BENCH_3.json BENCH_3_ci.json \
+        [--ref pack.gemm.p2q4.ring] [--tolerance 2.5]
+
+Exit codes: 0 ok, 1 perf regression, 2 structural problem (missing
+rows/reference, unreadable file) — both nonzero states fail CI.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, Optional
+
+DEFAULT_REF = "pack.gemm.p2q4.ring"
+DEFAULT_TOLERANCE = 2.5
+
+OK, REGRESSION, STRUCTURAL = 0, 1, 2
+
+
+def load_rows(path: str) -> Dict[str, float]:
+    """name -> us_per_call for every *timed* row (us > 0; zero-cost rows
+    are info rows like cache summaries)."""
+    with open(path) as f:
+        data = json.load(f)
+    if not isinstance(data, dict) or "rows" not in data:
+        raise ValueError(f"{path}: not a benchmark JSON (no 'rows')")
+    out: Dict[str, float] = {}
+    for row in data["rows"]:
+        us = float(row.get("us_per_call", 0.0))
+        if us > 0.0:
+            out[str(row["name"])] = us
+    return out
+
+
+def normalize(rows: Dict[str, float], ref: str) -> Dict[str, float]:
+    """Each row's time as a multiple of the reference row's time —
+    machine speed divides out."""
+    if ref not in rows:
+        raise ValueError(f"reference row {ref!r} missing "
+                         f"(have: {sorted(rows)})")
+    return {name: us / rows[ref] for name, us in rows.items()}
+
+
+def compare(base: Dict[str, float], cand: Dict[str, float], ref: str,
+            tolerance: float, filter_: str = "", out=sys.stdout) -> int:
+    """Row-by-row normalized comparison; returns an exit code.
+    ``filter_`` restricts the gated rows (the reference row is always
+    kept) — e.g. ``pack.gemm`` gates the schedule A/B rows but not the
+    compile-dominated tuning-pipeline rows."""
+    if filter_:
+        base = {k: v for k, v in base.items()
+                if filter_ in k or k == ref}
+        cand = {k: v for k, v in cand.items()
+                if filter_ in k or k == ref}
+    try:
+        nb = normalize(base, ref)
+        nc = normalize(cand, ref)
+    except ValueError as e:
+        print(f"bench_compare: {e}", file=out)
+        return STRUCTURAL
+    missing = sorted(set(nb) - set(nc))
+    if missing:
+        print(f"bench_compare: candidate lost rows: {missing}", file=out)
+        return STRUCTURAL
+    status = OK
+    print(f"{'row':40s} {'base_rel':>9s} {'cand_rel':>9s} "
+          f"{'x':>6s}  verdict", file=out)
+    for name in sorted(nb):
+        b, c = nb[name], nc[name]
+        ratio = c / b if b > 0 else float("inf")
+        bad = ratio > tolerance
+        verdict = "REGRESSED" if bad else "ok"
+        print(f"{name:40s} {b:9.3f} {c:9.3f} {ratio:6.2f}  {verdict}",
+              file=out)
+        if bad:
+            status = REGRESSION
+    if status == REGRESSION:
+        print(f"bench_compare: FAIL — rows above slowed >"
+              f"{tolerance}x relative to {ref!r}", file=out)
+    else:
+        print(f"bench_compare: ok ({len(nb)} rows within "
+              f"{tolerance}x of the snapshot, ref={ref!r})", file=out)
+    return status
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="fail when benchmark rows regress vs the committed "
+                    "snapshot (schedule-ratio comparison, noise-robust)")
+    ap.add_argument("baseline", help="committed snapshot (e.g. "
+                                     "BENCH_3.json)")
+    ap.add_argument("candidate", help="fresh run (e.g. BENCH_3_ci.json)")
+    ap.add_argument("--ref", default=DEFAULT_REF,
+                    help=f"in-file normalization row "
+                         f"(default {DEFAULT_REF})")
+    ap.add_argument("--tolerance", type=float, default=DEFAULT_TOLERANCE,
+                    help="max allowed normalized slowdown per row "
+                         f"(default {DEFAULT_TOLERANCE})")
+    ap.add_argument("--filter", default="",
+                    help="gate only rows containing this substring "
+                         "(the --ref row is always kept)")
+    args = ap.parse_args(argv)
+    try:
+        base = load_rows(args.baseline)
+        cand = load_rows(args.candidate)
+    except (OSError, ValueError, KeyError) as e:
+        print(f"bench_compare: {e}", file=sys.stdout)
+        return STRUCTURAL
+    return compare(base, cand, args.ref, args.tolerance,
+                   filter_=args.filter)
+
+
+if __name__ == "__main__":
+    sys.exit(main())
