@@ -17,9 +17,13 @@ scaling level, mirroring how GAMA evaluates single AIE -> pack -> array:
   (``array_gemm``) and a small model served with its lm-head/ffn GEMMs
   sharded through packs;
 * ``serve``: the serving level — continuous batching (slot-based KV
-  cache + mid-decode admission) vs serialized one-shot batches on the
-  same ragged staggered-arrival trace, reporting tokens/s and p50/p99
-  per-token latency, plus the schema-v4 ``batch_slots`` tuning pass.
+  cache + mid-decode admission) vs serialized one-shot batches vs the
+  paged-KV engine (kvpool page pool, bit-identity checked against the
+  dense run) on the same ragged staggered-arrival trace, reporting
+  tokens/s, p50/p99 per-token latency and the KV footprint of the
+  layout that actually ran (dense reservation vs live page high-water
+  mark), plus the schema-v5 ``serve`` tuning pass (batch_slots x
+  page_size).
 
 Run: PYTHONPATH=src python -m benchmarks.run
                               [--level single|pack|array|serve]
@@ -379,7 +383,13 @@ def bench_serve_trace() -> None:
     ragged staggered-arrival trace: tokens/s and p50/p99 per-token
     latency (us_per_call is per *generated token*).  Both run jitted
     and pre-compiled (first replay pays compile), so the rows compare
-    steady-state scheduling, not trace time."""
+    steady-state scheduling, not trace time.
+
+    KV memory is reported per layout: the dense rows carry the
+    ``slots x max_len`` reservation, the paged row the **live**
+    high-water mark (``pages_in_use x page_bytes``) — previously the
+    serve level re-reported the dense reservation regardless of the
+    layout that actually ran."""
     import jax
 
     from repro import configs as C
@@ -397,10 +407,11 @@ def bench_serve_trace() -> None:
     try:
         run_trace(engine, trace, log=None)          # compile warmup
         rep = run_trace(engine, trace, log=None)
+        kv_kib = engine.kv_bytes_reserved() / 1024
         emit("serve.continuous.s4", rep["wall_s"] * 1e6 / rep["tokens"],
              f"tok_s={rep['tok_s']:.1f} p50={rep['p50_ms']:.2f}ms "
              f"p99={rep['p99_ms']:.2f}ms shared_steps={rep['shared_steps']} "
-             f"decode_steps={rep['decode_steps']}")
+             f"decode_steps={rep['decode_steps']} kv_kib={kv_kib:.0f}")
         # Serialized baseline: same engine, same requests, grouped into
         # uniform one-shot batches (arrivals ignored — the baseline gets
         # every benefit of the doubt); each batch decodes to its longest
@@ -414,14 +425,37 @@ def bench_serve_trace() -> None:
         ratio = (useful / wall) / rep["tok_s"]
         emit("serve.serialized.s4", wall * 1e6 / useful,
              f"tok_s={useful / wall:.1f} batches={len(batches)} "
-             f"vs_continuous={ratio:.2f}x")
+             f"vs_continuous={ratio:.2f}x kv_kib={kv_kib:.0f}")
     finally:
         engine.close()
+    # Paged engine on the same trace: same scheduling, KV bound to live
+    # tokens through the kvpool block tables (greedy decode, so the
+    # token streams are bit-identical to the dense run's).
+    paged = ServeEngine(cfg, params, ServeConfig(
+        batch_slots=slots, max_len=max_len, kv="paged", page_size=16))
+    try:
+        run_trace(paged, trace, log=None)           # compile warmup
+        prep = run_trace(paged, trace, log=None)
+        for tid, toks in rep["results"].items():
+            np.testing.assert_array_equal(
+                toks, prep["results"][tid],
+                err_msg=f"paged diverged from dense (trace id {tid})")
+        hwm_kib = prep["kv_bytes_hwm"] / 1024
+        emit("serve.paged.s4", prep["wall_s"] * 1e6 / prep["tokens"],
+             f"tok_s={prep['tok_s']:.1f} p50={prep['p50_ms']:.2f}ms "
+             f"p99={prep['p99_ms']:.2f}ms page=16 "
+             f"pages_hwm={prep['pages_hwm']} "
+             f"reclaimed={prep['pages_reclaimed']} "
+             f"kv_hwm_kib={hwm_kib:.0f} "
+             f"dense_kib={kv_kib:.0f}")
+    finally:
+        paged.close()
 
 
 def bench_serve_tuning() -> None:
-    """The schema-v4 serve tunable: measure batch_slots candidates end
-    to end and persist the winner."""
+    """The schema-v5 serve tunable: measure (batch_slots, page_size)
+    candidates end to end — dense and paged layouts compete on the same
+    trace — and persist the winner."""
     from repro import configs as C
     from repro.tuning import dispatch
     cfg = C.get_smoke("smollm_360m")

@@ -18,6 +18,15 @@ blocks beyond it are skipped (the ``k_block_start < length`` guard), a
 zero-length row yields a zero output (the ``safe_l`` divisor), and
 stale KV from a slot's previous occupant is unreachable by
 construction.
+
+:func:`flash_paged_decode` is the same online-softmax over a **paged**
+KV cache (``repro.serving.kvpool``): K/V live in a global page pool of
+``page_size``-token blocks, and the kernel's split-K step *is* one
+page — the per-slot block table is scalar-prefetched, and each KV
+block's index map dereferences it, so the pages of one sequence are
+gathered inside the split-K loop without ever materializing a
+contiguous cache.  The last (partial) page is masked by the same
+per-slot length that masks the dense kernel.
 """
 
 from __future__ import annotations
@@ -137,4 +146,125 @@ def flash_decode(
         interpret=interpret,
         name="gama_flash_decode",
     )(len2d, qg, k, v)
+    return out.reshape(b, hq, d)
+
+
+def _paged_decode_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                         m_ref, l_ref, acc_ref, *,
+                         n_pages: int, page_size: int, gp: int,
+                         scale: float):
+    """One grid step = one page of one slot's block table.  The K/V refs
+    already hold the dereferenced page (the BlockSpec index map reads
+    the scalar-prefetched table), so the body is the dense kernel's
+    online-softmax with bk = page_size."""
+    pi = pl.program_id(2)
+
+    @pl.when(pi == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = len_ref[0, 0]
+    k_block_start = pi * page_size
+
+    # Pages at or past the length are either the partial tail (handled
+    # by the in-block mask below) or unallocated table entries pointing
+    # at the pool's null sink — the guard skips the sink pages entirely.
+    @pl.when(k_block_start < length)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)          # (gp, d)
+        k = k_ref[0, 0].astype(jnp.float32)          # (page_size, d)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # (gp, page_size)
+        k_pos = k_block_start + jax.lax.broadcasted_iota(
+            jnp.int32, (gp, page_size), 1)
+        valid = k_pos < length                       # partial-page mask
+        s = jnp.where(valid, s, _NEG_INF)
+
+        m_prev = m_ref[...][:, :1]
+        l_prev = l_ref[...][:, :1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.where(valid, jnp.exp(s - m_new), 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(pi == n_pages - 1)
+    def _done():
+        l = l_ref[...][:, :1]
+        safe_l = jnp.where(l > 0.0, l, 1.0)
+        o_ref[0, 0] = (acc_ref[...] / safe_l).astype(o_ref.dtype)
+
+
+def flash_paged_decode(
+    q: jax.Array,
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    block_tables: jax.Array,
+    *,
+    length: jax.Array,
+    scale: Optional[float] = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Paged flash decode.  q: (B, Hq, D); k_pages/v_pages:
+    (P, Hkv, page_size, D) pool arrays (P includes the null sink page);
+    block_tables: (B, max_pages) int32 page ids; length: (B,) int32
+    valid rows per slot.  Returns (B, Hq, D).
+
+    The split-K grid walks the block table, not the pool: step ``i`` of
+    slot ``b`` streams pool page ``block_tables[b, i]`` (scalar-prefetch
+    index map), so KV is gathered page by page inside the loop.  Table
+    entries past a slot's allocation point at the null page and are
+    skipped by the length guard.  The q-head group must be sublane-
+    padded by the caller (ops.py pads to >= 8 rows, as for the dense
+    kernel).
+    """
+    b, hq, d = q.shape
+    _, hkv, page_size, _ = k_pages.shape
+    _, n_pages = block_tables.shape
+    assert hq % hkv == 0
+    group = hq // hkv
+    if scale is None:
+        scale = d ** -0.5
+    len2d = length.reshape(b, 1).astype(jnp.int32)
+    qg = q.reshape(b, hkv, group, d)
+    grid = (b, hkv, n_pages)
+
+    kernel = functools.partial(_paged_decode_kernel, n_pages=n_pages,
+                               page_size=page_size, gp=group, scale=scale)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1), lambda bb, h, pi, bt: (bb, 0)),
+                pl.BlockSpec((1, 1, group, d),
+                             lambda bb, h, pi, bt: (bb, h, 0, 0)),
+                pl.BlockSpec((1, 1, page_size, d),
+                             lambda bb, h, pi, bt: (bt[bb, pi], h, 0, 0)),
+                pl.BlockSpec((1, 1, page_size, d),
+                             lambda bb, h, pi, bt: (bt[bb, pi], h, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, group, d),
+                                   lambda bb, h, pi, bt: (bb, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((group, _LANES), jnp.float32),
+                pltpu.VMEM((group, _LANES), jnp.float32),
+                pltpu.VMEM((group, d), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, group, d), q.dtype),
+        compiler_params=_compat.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+        name="gama_flash_paged_decode",
+    )(block_tables.astype(jnp.int32), len2d, qg, k_pages, v_pages)
     return out.reshape(b, hq, d)

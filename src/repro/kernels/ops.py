@@ -25,7 +25,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
-from repro.kernels.decode_attention import flash_decode
+from repro.kernels.decode_attention import flash_decode, flash_paged_decode
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.gemm import gama_gemm
 from repro.kernels.wkv import wkv6
@@ -207,6 +207,54 @@ def decode(q: jax.Array, k: jax.Array, v: jax.Array, *,
         qq = q
     out = flash_decode(qq, kp, vp, length=length, bk=bk, scale=scale,
                        interpret=_interpret())
+    if gp != group:
+        out = out.reshape(b, hkv, gp, d)[:, :, :group].reshape(b, hq, d)
+    return out
+
+
+def decode_paged(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array, *,
+                 block_tables: jax.Array, length: jax.Array,
+                 scale: Optional[float] = None,
+                 mode: Mode = "auto") -> jax.Array:
+    """Single-token decode attention over a **paged** KV cache
+    (``repro.serving.kvpool``).  q: (B,Hq,D); k_pages/v_pages:
+    (P,Hkv,page_size,D) pool arrays; block_tables: (B,max_pages) int32
+    page ids; length: (B,) int32 per-slot valid rows.
+
+    The kernel path gathers each slot's pages via the scalar-prefetched
+    block table inside the split-K loop (one page per step, the last
+    partial page masked by ``length``); the ref path materializes the
+    gather and runs the dense decode oracle — mathematically identical.
+    """
+    _check_gqa(q.shape[1], k_pages.shape[1])
+    b, hq, d = q.shape
+    _, hkv, page_size, _ = k_pages.shape
+    if block_tables.shape[0] != b or block_tables.ndim != 2:
+        raise ValueError(
+            f"block_tables must be (B={b}, max_pages), got "
+            f"{block_tables.shape}")
+    length = jnp.asarray(length, jnp.int32)
+    if length.shape != (b,):
+        raise ValueError(
+            f"paged decode length must be per-slot with shape ({b},), "
+            f"got {length.shape}")
+    # Stale host bookkeeping must not read past the table's coverage.
+    length = jnp.minimum(length, block_tables.shape[1] * page_size)
+    block_tables = jnp.asarray(block_tables, jnp.int32)
+    if not _use_kernel(mode):
+        return ref.ref_paged_decode_attention(
+            q, k_pages, v_pages, block_tables, length=length, scale=scale)
+    group = hq // hkv
+    gp = max(8, group)                  # sublane-pad the GQA group
+    if gp != group:
+        qg = q.reshape(b, hkv, group, d)
+        qg = jnp.pad(qg, ((0, 0), (0, 0), (0, gp - group), (0, 0)))
+        qq = qg.reshape(b, hkv * gp, d)
+    else:
+        qq = q
+    out = flash_paged_decode(qq, k_pages, v_pages, block_tables,
+                             length=length, scale=scale,
+                             interpret=_interpret())
     if gp != group:
         out = out.reshape(b, hkv, gp, d)[:, :, :group].reshape(b, hq, d)
     return out

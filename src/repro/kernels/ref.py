@@ -172,6 +172,35 @@ def ref_decode_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     return out.astype(q.dtype)
 
 
+def gather_pages(pool: jax.Array, block_tables: jax.Array) -> jax.Array:
+    """Materialize a contiguous per-slot cache from a page pool.
+
+    pool: (P, Hkv, page_size, D); block_tables: (B, max_pages) int32 →
+    (B, Hkv, max_pages * page_size, D).  This is the *oracle* view of
+    the paged layout (the Pallas kernel never builds it): position
+    ``t`` of slot ``b`` is row ``t % page_size`` of page
+    ``block_tables[b, t // page_size]``.
+    """
+    _, hkv, ps, d = pool.shape
+    b, n_pages = block_tables.shape
+    gathered = pool[block_tables]            # (B, max_pages, Hkv, ps, D)
+    return gathered.transpose(0, 2, 1, 3, 4).reshape(
+        b, hkv, n_pages * ps, d)
+
+
+def ref_paged_decode_attention(q: jax.Array, k_pages: jax.Array,
+                               v_pages: jax.Array,
+                               block_tables: jax.Array, *,
+                               length: jax.Array,
+                               scale: Optional[float] = None) -> jax.Array:
+    """Oracle for flash_paged_decode: gather pages contiguous, then the
+    dense decode oracle.  Unallocated table entries point at the null
+    sink page; ``length`` masks them (and the partial tail page) out."""
+    kc = gather_pages(k_pages, block_tables)
+    vc = gather_pages(v_pages, block_tables)
+    return ref_decode_attention(q, kc, vc, length=length, scale=scale)
+
+
 def ref_wkv(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
             u: jax.Array,
             state: Optional[jax.Array] = None) -> jax.Array:

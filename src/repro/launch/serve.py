@@ -15,9 +15,13 @@ Trace file (``--trace``, JSON lines; see docs/SERVING.md)::
 
 ``prompt`` gives explicit token ids; ``prompt_len`` asks the launcher to
 synthesize that many random tokens.  ``--verify`` re-runs every request
-through a one-slot one-shot ``generate()`` and checks the continuous
-outputs are identical.  ``--mesh D,M`` installs a pack mesh so the large
-GEMMs run as pack-level collective matmuls (simulate devices with
+through a one-slot one-shot *dense* ``generate()`` and checks the
+continuous outputs are identical (for ``--kv paged`` this is the
+paged-vs-dense bit-identity check).  ``--kv paged`` serves through the
+``repro.serving.kvpool`` page pool (``--page_size``/``--pool_pages``)
+and logs page-reclaim/preemption events plus the pool high-water mark.
+``--mesh D,M`` installs a pack mesh so the large GEMMs run as
+pack-level collective matmuls (simulate devices with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8``).
 """
 
@@ -86,8 +90,14 @@ def run_trace(engine, trace: List[dict],
                             arrival=base + t["arrival"])
         rid_to_tid[rid] = t["id"]
     token_lat: List[float] = []
+    paged = engine.kv_mode == "paged"
+    # Per-replay deltas: the engine's counters are lifetime-cumulative,
+    # and a bench replays the same trace on a warm engine.
+    reclaim_base = engine.pool.total_reclaimed if paged else 0
+    preempt_base = engine.stats["preemptions"]
     t0 = time.monotonic()
     while not engine.sched.done():
+        reclaimed0 = engine.pool.total_reclaimed if paged else 0
         s0 = time.monotonic()
         ev = engine.step()
         dt = time.monotonic() - s0
@@ -99,14 +109,23 @@ def run_trace(engine, trace: List[dict],
                 f"admitted={[rid_to_tid[r] for r in ev['admitted']]} "
                 f"sharing decode with "
                 f"{[rid_to_tid[r] for r in older]}")
+        for rid in ev.get("preempted", []):
+            log(f"[serve] preempted id={rid_to_tid[rid]} (pool "
+                f"exhausted) — requeued at the head")
         for rid in ev["finished"]:
             n = len(engine.result(rid))
             log(f"[serve] done id={rid_to_tid[rid]} tokens={n}")
+        if paged:
+            delta = engine.pool.total_reclaimed - reclaimed0
+            if delta:
+                log(f"[serve] reclaimed {delta} pages -> "
+                    f"{engine.pool.free_pages}/{engine.pool.num_pages} "
+                    f"free")
     wall = time.monotonic() - t0
     results = {rid_to_tid[rid]: toks
                for rid, toks in engine.drain().items()}
     tokens = sum(len(v) for v in results.values())
-    return {
+    rep = {
         "results": results,
         "wall_s": wall,
         "tokens": tokens,
@@ -115,7 +134,14 @@ def run_trace(engine, trace: List[dict],
         "p99_ms": float(np.percentile(token_lat, 99) * 1e3),
         "shared_steps": engine.stats["shared_steps"],
         "decode_steps": engine.stats["decode_steps"],
+        "kv_bytes_hwm": engine.kv_bytes_high_water(),
+        "kv_bytes_reserved": engine.kv_bytes_reserved(),
     }
+    if paged:
+        rep["pages_hwm"] = engine.pool.high_water
+        rep["pages_reclaimed"] = engine.pool.total_reclaimed - reclaim_base
+        rep["preemptions"] = engine.stats["preemptions"] - preempt_base
+    return rep
 
 
 def main() -> None:
@@ -132,6 +158,17 @@ def main() -> None:
     ap.add_argument("--trace", type=str, default=None,
                     help="JSONL trace file (overrides --requests/"
                          "--prompt_len/--stagger)")
+    ap.add_argument("--kv", choices=("dense", "paged"), default="dense",
+                    help="KV layout: dense per-slot max_len rows, or "
+                         "the kvpool page pool + block tables")
+    ap.add_argument("--page_size", type=int, default=0,
+                    help="paged: tokens per page (0 = tuner/analytic)")
+    ap.add_argument("--pool_pages", type=int, default=0,
+                    help="paged: pool capacity in pages (0 = the "
+                         "dense-equivalent slots * ceil(max_len/page))")
+    ap.add_argument("--eos_id", type=int, default=None,
+                    help="token id that ends a request early (frees its "
+                         "slot and, when paged, its KV pages that step)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--quantize", action="store_true",
@@ -173,7 +210,8 @@ def main() -> None:
     engine = ServeEngine(cfg, params, ServeConfig(
         batch_slots=args.batch_slots, max_len=max_len,
         temperature=args.temperature, seed=args.seed,
-        quantize=args.quantize,
+        quantize=args.quantize, eos_id=args.eos_id,
+        kv=args.kv, page_size=args.page_size, pool_pages=args.pool_pages,
         pack_mesh=mesh, pack_min_flops=args.pack_min_flops))
     try:
         rep = run_trace(engine, trace)
@@ -185,6 +223,18 @@ def main() -> None:
               f"shared_steps={rep['shared_steps']} "
               f"decode_steps={rep['decode_steps']} arch={cfg.name} "
               f"slots={engine.scfg.batch_slots}")
+        if engine.kv_mode == "paged":
+            print(f"[serve] paged kv: page_size={engine.pool.page_size} "
+                  f"pool={engine.pool.num_pages} pages "
+                  f"pages_hwm={rep['pages_hwm']} "
+                  f"pages_reclaimed={rep['pages_reclaimed']} "
+                  f"preemptions={rep['preemptions']} "
+                  f"kv_hwm={rep['kv_bytes_hwm'] / 2**20:.2f}MiB "
+                  f"(dense would reserve "
+                  f"{engine.scfg.batch_slots * engine.scfg.max_len * engine.token_kv_bytes() / 2**20:.2f}MiB)")
+        elif args.kv == "paged":
+            print(f"[serve] paged kv bypassed: arch {cfg.name} has "
+                  f"non-attention state — dense layout in effect")
         if args.verify:
             _verify(cfg, params, trace, rep["results"], engine.scfg)
     finally:
@@ -192,13 +242,15 @@ def main() -> None:
 
 
 def _verify(cfg, params, trace, results, scfg) -> None:
-    """Re-run every request one-shot (one slot, same kernels/pack
-    context) and compare with the continuous-batching outputs."""
+    """Re-run every request one-shot (one slot, *dense* KV, same
+    kernels/pack context) and compare with the continuous-batching
+    outputs — for a paged run this is exactly the paged-vs-dense
+    bit-identity check."""
     import dataclasses
 
     from repro.serving.engine import ServeConfig, ServeEngine
     one = ServeEngine(cfg, params, dataclasses.replace(
-        scfg, batch_slots=1))
+        scfg, batch_slots=1, kv="dense"))
     try:
         bad = []
         for t in trace:

@@ -3,7 +3,9 @@ transformers, MoE, Mamba, RWKV6, encoder-decoder and VLM backbones."""
 
 from repro.models.config import BlockSpec, ModelConfig
 from repro.models.model import (decode_step, forward, init_cache,
-                                init_params, loss_fn, param_count, prefill)
+                                init_paged_cache, init_params, loss_fn,
+                                paged_eligible, param_count, prefill)
 
 __all__ = ["BlockSpec", "ModelConfig", "decode_step", "forward",
-           "init_cache", "init_params", "loss_fn", "param_count", "prefill"]
+           "init_cache", "init_paged_cache", "init_params", "loss_fn",
+           "paged_eligible", "param_count", "prefill"]

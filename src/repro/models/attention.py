@@ -44,6 +44,20 @@ def init_kv_cache(batch: int, n_kv_heads: int, max_len: int, d_head: int,
     }
 
 
+def init_paged_kv_cache(num_pages: int, n_kv_heads: int, page_size: int,
+                        d_head: int, dtype=jnp.bfloat16) -> Params:
+    """Paged pool layout (``repro.serving.kvpool``): ``num_pages`` blocks
+    of ``page_size`` tokens shared by every slot, addressed through a
+    per-slot block table.  ``num_pages`` must already include the null
+    sink page (the engine allocates pool + 1)."""
+    return {
+        "k_pages": jnp.zeros((num_pages, n_kv_heads, page_size, d_head),
+                             dtype),
+        "v_pages": jnp.zeros((num_pages, n_kv_heads, page_size, d_head),
+                             dtype),
+    }
+
+
 def attention(
     p: Params,
     x: jax.Array,                       # (B, S, d_model)
@@ -58,6 +72,7 @@ def attention(
     causal: bool = True,
     cache: Optional[Params] = None,
     cache_pos: Optional[jax.Array] = None,      # scalar or (B,) write offset
+    block_tables: Optional[jax.Array] = None,   # (B, max_pages) paged KV
     kv_from: Optional[jax.Array] = None,        # encoder states (cross-attn)
     use_cached_kv: bool = False,                # decode-time cross attention
     attn_mode: str = "auto",
@@ -113,6 +128,36 @@ def attention(
         raise NotImplementedError(
             "per-slot cache_pos is a decode-only shape (S == 1); prefill "
             "admits one request at a time at its own offset")
+    paged = cache is not None and "k_pages" in cache
+    if paged:
+        # Paged KV (kvpool): decode-only — prefill runs against a dense
+        # single-slot cache whose pages the engine scatters into the
+        # pool.  The new token's KV row lands at row pos % page_size of
+        # page block_tables[b, pos // page_size]; page ids are unique
+        # per live slot (free slots share the null sink, whose garbage
+        # is unreachable: their length masks everything).
+        if not ragged or block_tables is None:
+            raise NotImplementedError(
+                "paged KV attention needs per-slot cache_pos and "
+                "block_tables (the continuous-batching decode shape)")
+        page_size = cache["k_pages"].shape[2]
+        pos = jnp.asarray(cache_pos, jnp.int32)
+        page_ids = block_tables[jnp.arange(b), pos // page_size]
+        rows = pos % page_size
+        ck = cache["k_pages"].at[page_ids, :, rows, :].set(
+            k[:, :, 0].astype(cache["k_pages"].dtype))
+        cv = cache["v_pages"].at[page_ids, :, rows, :].set(
+            v[:, :, 0].astype(cache["v_pages"].dtype))
+        new_cache = {"k_pages": ck, "v_pages": cv}
+        length = pos + 1
+        out = kops.decode_paged(q[:, :, 0], ck.astype(x.dtype),
+                                cv.astype(x.dtype),
+                                block_tables=block_tables, length=length,
+                                mode=attn_mode)
+        out = out[:, :, None].transpose(0, 2, 1, 3)   # (B, 1, H, D)
+        out = out.reshape(b, s, n_heads * d_head)
+        out = L.shard_hint(out, "channels")
+        return L.dense(p["wo"], out), new_cache
     if cache is not None:
         if ragged:
             # Continuous batching: each slot writes its new KV row at its

@@ -119,6 +119,7 @@ def _encode(params: Params, batch: Batch, cfg: ModelConfig,
 def forward(params: Params, batch: Batch, cfg: ModelConfig, *,
             caches: Optional[List] = None,
             cache_pos: Optional[jax.Array] = None,
+            block_tables: Optional[jax.Array] = None,
             decode: bool = False,
             remat: bool = False,
             remat_policy: str = "full"
@@ -132,8 +133,8 @@ def forward(params: Params, batch: Batch, cfg: ModelConfig, *,
     enc_out = None if decode else _encode(params, batch, cfg, remat)
     x, new_caches, aux = T.apply_stack(
         params["blocks"], x, cfg, positions=pos, caches=caches,
-        cache_pos=cache_pos, enc_out=enc_out, decode=decode, remat=remat,
-        remat_policy=remat_policy)
+        cache_pos=cache_pos, block_tables=block_tables, enc_out=enc_out,
+        decode=decode, remat=remat, remat_policy=remat_policy)
     if cfg.norm == "layernorm":
         x = L.layernorm(params["final_norm"], x, cfg.norm_eps)
     else:
@@ -164,6 +165,26 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
                               cross_len=enc_len if cfg.encoder_decoder else 0)
 
 
+def paged_eligible(cfg: ModelConfig) -> bool:
+    """True when the arch can decode through the paged KV pool: every
+    mixer is attention (recurrent mamba/rwkv state is fixed-size per
+    slot — nothing to page) and there is no enc-dec cross cache."""
+    return (not cfg.encoder_decoder
+            and all(spec.mixer == "attn" for spec in cfg.pattern))
+
+
+def init_paged_cache(cfg: ModelConfig, num_pages: int,
+                     page_size: int) -> List:
+    """Paged-KV cache stack (``repro.serving.kvpool``): per attention
+    layer, a (num_pages + 1, Hkv, page_size, D) page pool — the extra
+    row is the null sink unallocated block-table entries point at."""
+    if not paged_eligible(cfg):
+        raise ValueError(
+            f"arch {cfg.name!r} has non-attention state (or an enc-dec "
+            f"cross cache) — the paged KV pool covers attention KV only")
+    return T.init_stack_cache(cfg, 0, 0, paged=(num_pages + 1, page_size))
+
+
 def prefill(params: Params, batch: Batch, cfg: ModelConfig,
             caches: List) -> Tuple[jax.Array, List]:
     """Run the prompt, fill caches; returns (last-token logits, caches)."""
@@ -174,7 +195,8 @@ def prefill(params: Params, batch: Batch, cfg: ModelConfig,
 
 def decode_step(params: Params, token: jax.Array, pos: jax.Array,
                 cfg: ModelConfig, caches: List,
-                embeds: Optional[jax.Array] = None
+                embeds: Optional[jax.Array] = None,
+                block_tables: Optional[jax.Array] = None
                 ) -> Tuple[jax.Array, List]:
     """One token (B,) at position `pos`; returns (logits, caches).
 
@@ -182,7 +204,9 @@ def decode_step(params: Params, token: jax.Array, pos: jax.Array,
     the same position, the one-shot ``generate`` shape) or a (B,) int32
     vector of per-slot positions (ragged continuous batching: each slot
     writes its KV at its own offset and attends only to its own valid
-    prefix).
+    prefix).  With a paged cache (``init_paged_cache``),
+    ``block_tables`` (B, max_pages) maps each slot's positions onto
+    pool pages; ``pos`` must then be the per-slot vector form.
     """
     batch: Batch = {}
     if embeds is not None:
@@ -190,5 +214,6 @@ def decode_step(params: Params, token: jax.Array, pos: jax.Array,
     else:
         batch["tokens"] = token[:, None]
     lg, new_caches, _ = forward(params, batch, cfg, caches=caches,
-                                cache_pos=pos, decode=True)
+                                cache_pos=pos, block_tables=block_tables,
+                                decode=True)
     return lg[:, 0], new_caches

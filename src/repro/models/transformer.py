@@ -80,11 +80,26 @@ def init_block(rng, cfg: ModelConfig, spec: BlockSpec,
 
 
 def init_block_cache(cfg: ModelConfig, spec: BlockSpec, batch: int,
-                     max_len: int, cross_len: int = 0) -> Cache:
+                     max_len: int, cross_len: int = 0,
+                     paged: Optional[Tuple[int, int]] = None) -> Cache:
+    """``paged=(num_pages, page_size)`` swaps the attention KV layout
+    for the kvpool page-pool arrays (decode addresses them through a
+    block table; ``batch``/``max_len`` are then ignored for attention).
+    Recurrent state (mamba/rwkv) is fixed-size per slot and has no
+    paged form; enc-dec cross caches are likewise dense-only."""
     c: Cache = {}
     if spec.mixer == "attn":
-        c["attn"] = A.init_kv_cache(batch, cfg.n_kv_heads, max_len,
-                                    cfg.d_head, jnp.dtype(cfg.cache_dtype))
+        if paged is not None:
+            if cross_len:
+                raise NotImplementedError(
+                    "paged KV does not cover enc-dec cross caches")
+            c["attn"] = A.init_paged_kv_cache(
+                paged[0], cfg.n_kv_heads, paged[1], cfg.d_head,
+                jnp.dtype(cfg.cache_dtype))
+        else:
+            c["attn"] = A.init_kv_cache(batch, cfg.n_kv_heads, max_len,
+                                        cfg.d_head,
+                                        jnp.dtype(cfg.cache_dtype))
     elif spec.mixer == "mamba":
         c["mamba"] = M.init_mamba_cache(batch, cfg.d_model,
                                         cfg.mamba or M.MambaConfig(),
@@ -108,6 +123,7 @@ def apply_block(
     positions: Optional[jax.Array],
     cache: Optional[Cache] = None,
     cache_pos: Optional[jax.Array] = None,
+    block_tables: Optional[jax.Array] = None,
     enc_out: Optional[jax.Array] = None,
     decode: bool = False,
 ) -> Tuple[jax.Array, Optional[Cache], jax.Array]:
@@ -123,7 +139,7 @@ def apply_block(
             rope_theta=cfg.rope_theta, mrope_sections=cfg.mrope_sections,
             qk_norm=cfg.qk_norm, causal=cfg.causal,
             cache=None if cache is None else cache.get("attn"),
-            cache_pos=cache_pos)
+            cache_pos=cache_pos, block_tables=block_tables)
         if new_cache is not None and nc is not None:
             new_cache["attn"] = nc
     elif spec.mixer == "mamba":
@@ -195,10 +211,12 @@ def init_stack(rng, cfg: ModelConfig, cross_attn: bool = False
 
 
 def init_stack_cache(cfg: ModelConfig, batch: int, max_len: int,
-                     cross_len: int = 0) -> List[Cache]:
+                     cross_len: int = 0,
+                     paged: Optional[Tuple[int, int]] = None) -> List[Cache]:
     caches = []
     for spec in cfg.pattern:
-        one = init_block_cache(cfg, spec, batch, max_len, cross_len)
+        one = init_block_cache(cfg, spec, batch, max_len, cross_len,
+                               paged=paged)
         caches.append(jax.tree.map(
             lambda x: jnp.broadcast_to(x, (cfg.n_groups,) + x.shape), one))
     return caches
@@ -212,6 +230,7 @@ def apply_stack(
     positions: Optional[jax.Array],
     caches: Optional[List[Cache]] = None,
     cache_pos: Optional[jax.Array] = None,
+    block_tables: Optional[jax.Array] = None,
     enc_out: Optional[jax.Array] = None,
     decode: bool = False,
     remat: bool = False,
@@ -235,7 +254,8 @@ def apply_stack(
             c = None if caches_g is None else caches_g[i]
             x, nc, a = apply_block(
                 params_g[i], x, cfg, spec, positions=positions, cache=c,
-                cache_pos=cache_pos, enc_out=enc_out, decode=decode)
+                cache_pos=cache_pos, block_tables=block_tables,
+                enc_out=enc_out, decode=decode)
             aux = aux + a
             if new_caches_g is not None:
                 new_caches_g.append(nc if nc else c)

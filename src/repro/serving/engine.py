@@ -17,6 +17,15 @@ admitted at step 0) and stays numerics-identical for a uniform batch.
 Prefill and decode are separately jitted; the decode program takes a
 (B,) *per-slot* position vector so ragged batches write KV at their own
 offsets and attend only to their own valid prefixes.
+
+``ServeConfig(kv="paged")`` swaps the dense per-slot ``max_len``
+reservation for the ``repro.serving.kvpool`` page pool: prefill
+scatters prompt pages into the pool along the slot's block table,
+decode appends rows (allocating pages on demand, preempting the
+youngest admission when the pool is exhausted), and completion/EOS
+reclaims a request's pages the same step — KV memory tracks *live
+tokens*, not ``slots x max_len``, which is what lets the paged engine
+admit more concurrent requests than the dense engine at equal memory.
 """
 
 from __future__ import annotations
@@ -28,9 +37,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models import decode_step, forward, init_cache, prefill
+from repro.models import (decode_step, forward, init_cache,
+                          init_paged_cache, paged_eligible, prefill)
 from repro.models.config import ModelConfig
-from repro.serving.scheduler import Request, Scheduler, Slot
+from repro.serving.kvpool import BlockTables, PagePool, pages_for
+from repro.serving.scheduler import DECODE, Request, Scheduler, Slot
 
 
 @dataclasses.dataclass
@@ -42,6 +53,16 @@ class ServeConfig:
     seed: int = 0             # PRNG seed for sampled (temperature) decoding
     quantize: bool = False    # int8 weight-only (paper multi-precision)
     pretune: bool = True      # resolve tuned kernel configs at init
+    eos_id: Optional[int] = None  # sampled EOS ends the request early
+    # Paged KV (repro.serving.kvpool): "paged" swaps the dense per-slot
+    # max_len reservation for a global page pool + per-slot block
+    # tables, so KV memory tracks live tokens.  Archs with recurrent
+    # mixers or an enc-dec cross cache bypass to dense transparently
+    # (engine.kv_mode says which path is live).
+    kv: str = "dense"         # "dense" | "paged"
+    page_size: int = 0        # tokens per page; 0 = tuner (schema v5)
+    pool_pages: int = 0       # pool capacity; 0 = slots * ceil(max_len/ps)
+                              # (the dense-equivalent footprint)
     # Pack-level sharding (repro.distributed.pack_gemm): when a mesh is
     # given, GEMMs above pack_min_flops — the lm head and the ffn
     # projections — run as pack/array collective matmuls over its model
@@ -125,14 +146,45 @@ class ServeEngine:
             params, self.quant_stats = quantize_params(params)
         else:
             self.quant_stats = None
+        if scfg.kv not in ("dense", "paged"):
+            raise ValueError(f"ServeConfig.kv must be 'dense' or "
+                             f"'paged', got {scfg.kv!r}")
         if scfg.batch_slots == 0:
-            # Tuned slot count (schema v4 `serve` op): measured best for
+            # Tuned slot count (schema v5 `serve` op): measured best for
             # this arch/workload when the cache has one, else the
             # analytic default.
             from repro.tuning import dispatch
             scfg = dataclasses.replace(
                 scfg, batch_slots=dispatch.serve_slots(
                     cfg, scfg.max_len, cfg.cdtype))
+        # Paged KV needs every position to live in an attention page;
+        # recurrent state (mamba/rwkv) is fixed-size per slot and an
+        # enc-dec cross cache is length-fixed, so those archs bypass the
+        # pool and keep the dense layout (without error — kv_mode
+        # records the live path).
+        self.kv_mode = scfg.kv
+        if scfg.kv == "paged" and not paged_eligible(cfg):
+            self.kv_mode = "dense"
+        if self.kv_mode == "paged":
+            if scfg.page_size == 0:
+                from repro.tuning import dispatch
+                scfg = dataclasses.replace(
+                    scfg, page_size=dispatch.serve_page_size(
+                        cfg, scfg.max_len, cfg.cdtype))
+            ps = scfg.page_size
+            self._max_pages = pages_for(scfg.max_len, ps)
+            pool_pages = scfg.pool_pages or scfg.batch_slots \
+                * self._max_pages
+            self.pool = PagePool(pool_pages, ps)
+            self.blocks = BlockTables(self.pool, scfg.batch_slots,
+                                      self._max_pages)
+            # Dense scratch the per-slot prefill runs against, page-
+            # aligned so whole pages scatter into the pool.
+            self._fresh_len = self._max_pages * ps
+        else:
+            self.pool = None
+            self.blocks = None
+            self._fresh_len = scfg.max_len
         self.cfg, self.params, self.scfg = cfg, params, scfg
         # Recurrent mixers (mamba/rwkv, incl. the rwkv channel-mix FFN)
         # thread state through *every* token, pad or not — a
@@ -182,9 +234,15 @@ class ServeEngine:
         self._prefill_full = jax.jit(
             lambda p, b, c: forward(p, b, cfg, caches=c,
                                     cache_pos=jnp.zeros((), jnp.int32))[:2])
-        self._decode = jax.jit(
-            lambda p, t, pos, c: decode_step(p, t, pos, cfg, c))
-        self._insert = jax.jit(self._insert_slot)
+        if self.kv_mode == "paged":
+            self._decode = jax.jit(
+                lambda p, t, pos, bt, c: decode_step(p, t, pos, cfg, c,
+                                                     block_tables=bt))
+            self._insert = jax.jit(self._insert_slot_pages)
+        else:
+            self._decode = jax.jit(
+                lambda p, t, pos, c: decode_step(p, t, pos, cfg, c))
+            self._insert = jax.jit(self._insert_slot)
         self._sample_slots = jax.jit(self._make_sampler())
         # -- continuous-batching state (persistent across calls) ----------
         self.sched = Scheduler(scfg.batch_slots)
@@ -194,8 +252,10 @@ class ServeEngine:
         self._tok = np.zeros((scfg.batch_slots,), np.int32)
         self._out: Dict[int, List[int]] = {}
         self._finished: Dict[int, np.ndarray] = {}
+        self._slot_req: Dict[int, Request] = {}   # slot idx -> live Request
         self.stats = {"admitted": 0, "finished": 0, "prefills": 0,
-                      "decode_steps": 0, "shared_steps": 0}
+                      "decode_steps": 0, "shared_steps": 0,
+                      "preemptions": 0, "eos_exits": 0}
 
     # -- lifecycle ----------------------------------------------------------
 
@@ -238,8 +298,39 @@ class ServeEngine:
         return shapes
 
     def new_cache(self):
+        if self.kv_mode == "paged":
+            return init_paged_cache(self.cfg, self.pool.num_pages,
+                                    self.pool.page_size)
         return init_cache(self.cfg, self.scfg.batch_slots,
                           self.scfg.max_len, enc_len=self.scfg.enc_len)
+
+    # -- KV memory accounting ------------------------------------------------
+
+    def token_kv_bytes(self) -> int:
+        """Bytes of attention KV one token occupies across the stack
+        (k + v, every attention layer)."""
+        cfg = self.cfg
+        n_attn = sum(1 for spec in cfg.pattern if spec.mixer == "attn")
+        itemsize = jnp.dtype(cfg.cache_dtype).itemsize
+        return (2 * n_attn * cfg.n_groups * cfg.n_kv_heads * cfg.d_head
+                * itemsize)
+
+    def kv_bytes_reserved(self) -> int:
+        """Attention-KV bytes held for the engine's lifetime: the page
+        pool (paged) or slots x max_len rows (dense)."""
+        per_tok = self.token_kv_bytes()
+        if self.kv_mode == "paged":
+            return self.pool.num_pages * self.pool.page_size * per_tok
+        return self.scfg.batch_slots * self.scfg.max_len * per_tok
+
+    def kv_bytes_high_water(self) -> int:
+        """Peak attention-KV bytes actually *bound to live requests*:
+        ``pages_in_use`` high-water x page bytes (paged); the dense
+        layout binds its whole reservation up front."""
+        per_tok = self.token_kv_bytes()
+        if self.kv_mode == "paged":
+            return self.pool.high_water * self.pool.page_size * per_tok
+        return self.kv_bytes_reserved()
 
     def _insert_slot(self, full, one, slot):
         """Overwrite slot ``slot`` of the persistent cache with a
@@ -250,6 +341,26 @@ class ServeEngine:
             start = (0, slot) + (0,) * (f.ndim - 2)
             return jax.lax.dynamic_update_slice(f, o.astype(f.dtype), start)
         return jax.tree.map(upd, full, one)
+
+    def _insert_slot_pages(self, full, one, bt_row):
+        """Scatter a freshly prefilled single-slot *dense* cache into
+        the page pools along the slot's block-table row.  Every chunk of
+        the (page-aligned) dense scratch is written — chunks past the
+        slot's allocation land on the null sink page (bt_row points them
+        there), so one compiled program covers every prompt length."""
+        mp, ps = self._max_pages, self.pool.page_size
+
+        def scat(pool, dense):
+            # pool: (G, P+1, Hkv, ps, D); dense: (G, 1, Hkv, mp*ps, D)
+            g, _, hkv, _, d = dense.shape
+            chunks = dense[:, 0].reshape(g, hkv, mp, ps, d) \
+                .transpose(0, 2, 1, 3, 4)              # (G, mp, Hkv, ps, D)
+            return pool.at[:, bt_row].set(chunks.astype(pool.dtype))
+
+        return [{"attn": {
+            "k_pages": scat(fc["attn"]["k_pages"], oc["attn"]["k"]),
+            "v_pages": scat(fc["attn"]["v_pages"], oc["attn"]["v"]),
+        }} for fc, oc in zip(full, one)]
 
     def _make_sampler(self):
         temp = self.scfg.temperature
@@ -285,6 +396,14 @@ class ServeEngine:
             raise ValueError(
                 f"prompt ({prompt.size}) + max_new ({max_new}) exceeds "
                 f"max_len={self.scfg.max_len}")
+        if self.kv_mode == "paged":
+            need = pages_for(prompt.size + max_new,
+                             self.pool.page_size)
+            if need > self.pool.num_pages:
+                raise ValueError(
+                    f"request needs {need} pages but the pool has "
+                    f"{self.pool.num_pages} — it could never run, even "
+                    f"alone (raise ServeConfig.pool_pages)")
         rid = self._next_rid
         self._next_rid += 1
         self.sched.submit(Request(
@@ -295,35 +414,44 @@ class ServeEngine:
 
     def step(self) -> Dict[str, List[int]]:
         """One engine step: admit arrived requests into free slots
-        (prefill each at its own offset), then run one batched decode
-        over every active slot with per-slot positions.  Returns the
-        step's events ({admitted, decoded, finished} request ids)."""
+        (prefill each at its own offset), grow paged slots' block
+        tables for the incoming token (preempting — FIFO-youngest-first
+        — when the pool is exhausted), then run one batched decode over
+        every active slot with per-slot positions.  A second admission
+        pass follows the decode, so pages/slots reclaimed *this step*
+        (EOS / completion) are immediately reusable by queued requests.
+        Returns the step's events ({admitted, decoded, finished,
+        preempted} request ids)."""
         self._check_open("step")
         if self.caches is None:
             self.caches = self.new_cache()
         holdover = [s.rid for s in self.sched.active_slots()]
         events: Dict[str, List[int]] = {"admitted": [], "decoded": [],
-                                        "finished": []}
-        for req in self.sched.pop_admissible(self.step_count):
-            slot = self.sched.admit(req)
-            tok0 = self._prefill_slot(slot, req)
-            self.stats["admitted"] += 1
-            events["admitted"].append(req.rid)
-            self._emit(slot, tok0, events)
+                                        "finished": [], "preempted": []}
+        self._admit(events)
+        if self.kv_mode == "paged":
+            self._grow_pages(events)
         active = self.sched.active_slots()
         if active:
             pos = np.zeros((self.scfg.batch_slots,), np.int32)
+            pos_cap = (self._fresh_len if self.kv_mode == "paged"
+                       else self.scfg.max_len) - 1
             for s in self.sched.slots:
-                # Inactive slots decode garbage into their own (dead)
-                # rows; re-admission replaces the whole row, so the
-                # clamp only guards the cache bound.
-                pos[s.index] = min(s.length, self.scfg.max_len - 1)
+                # Inactive slots decode garbage into their own dead rows
+                # (dense: replaced wholesale on re-admission; paged: the
+                # null sink page); the clamp only guards the bound.
+                pos[s.index] = min(s.length, pos_cap)
             token_idx = np.zeros((self.scfg.batch_slots,), np.int32)
             for s in active:
                 token_idx[s.index] = s.generated
-            logits, self.caches = self._decode(
-                self.params, jnp.asarray(self._tok), jnp.asarray(pos),
-                self.caches)
+            if self.kv_mode == "paged":
+                logits, self.caches = self._decode(
+                    self.params, jnp.asarray(self._tok), jnp.asarray(pos),
+                    jnp.asarray(self.blocks.table), self.caches)
+            else:
+                logits, self.caches = self._decode(
+                    self.params, jnp.asarray(self._tok), jnp.asarray(pos),
+                    self.caches)
             toks = np.asarray(self._sample_slots(logits,
                                                  jnp.asarray(token_idx)))
             self.stats["decode_steps"] += 1
@@ -337,8 +465,74 @@ class ServeEngine:
                 self._tok[s.index] = toks[s.index]
                 events["decoded"].append(s.rid)
                 self._emit(s, int(toks[s.index]), events)
+        if events["finished"] or events["preempted"]:
+            # Same-step reuse: whatever the decode just freed can admit
+            # a queued request now (it joins the next decode step).
+            self._admit(events)
         self.step_count += 1
         return events
+
+    def _admit(self, events: Dict[str, List[int]]) -> None:
+        """Admission pass: free slots AND (paged) enough free pages for
+        each prompt, reserved cumulatively in FIFO order."""
+        fits = None
+        if self.kv_mode == "paged":
+            budget = self.pool.free_pages
+            state = {"reserved": 0}
+
+            def fits(req):
+                # +1: the first decode token writes KV at position
+                # prompt_len — for a page-aligned prompt that is a
+                # fresh page, and admitting without it would prefill
+                # only to self-preempt in _grow_pages the same step.
+                need = pages_for(req.prompt_len + 1, self.pool.page_size)
+                if state["reserved"] + need > budget:
+                    return False
+                state["reserved"] += need
+                return True
+        for req in self.sched.pop_admissible(self.step_count, fits=fits):
+            slot = self.sched.admit(req)
+            if self.kv_mode == "paged":
+                pages = self.blocks.assign(slot.index, req.prompt_len)
+                assert pages is not None, "admission fits() reserved these"
+            self._slot_req[slot.index] = req
+            tok0 = self._prefill_slot(slot, req)
+            self.stats["admitted"] += 1
+            events["admitted"].append(req.rid)
+            self._emit(slot, tok0, events)
+
+    def _grow_pages(self, events: Dict[str, List[int]]) -> None:
+        """Before a paged decode, every active slot needs a table entry
+        for the KV row the incoming token writes (position ``length``).
+        When the pool is exhausted, the *youngest* admission (largest
+        admit_seq) is preempted — pages reclaimed, request requeued at
+        the head — until the append succeeds; oldest slots grow first,
+        so the policy is deterministic and FIFO-fair (a victim can
+        never be older than the slot it yields to)."""
+        for s in sorted(self.sched.active_slots(),
+                        key=lambda s: s.admit_seq):
+            if s.state != DECODE:
+                continue            # preempted by an earlier iteration
+            while not self.blocks.extend_to(s.index, s.length + 1):
+                victim = max(self.sched.active_slots(),
+                             key=lambda v: v.admit_seq)
+                self._preempt(victim, events)
+                if victim is s:
+                    break           # s yielded its own pages; skip it
+
+    def _preempt(self, slot: Slot, events: Dict[str, List[int]]) -> None:
+        """Evict a mid-decode request to reclaim its pages: partial
+        output is discarded and the original request returns to the
+        head of the queue (greedy decoding regenerates the identical
+        stream on re-admission)."""
+        rid = slot.rid
+        self._out.pop(rid, None)
+        self.blocks.release(slot.index)
+        req = self._slot_req.pop(slot.index)
+        self.sched.release(slot)
+        self.sched.requeue(req)
+        self.stats["preemptions"] += 1
+        events["preempted"].append(rid)
 
     def drain(self) -> Dict[int, np.ndarray]:
         """Step until the queue and all slots are empty; returns (and
@@ -357,11 +551,20 @@ class ServeEngine:
               ) -> None:
         self._out.setdefault(slot.rid, []).append(int(tok))
         slot.generated += 1
-        if slot.generated >= slot.max_new:
+        eos = (self.scfg.eos_id is not None
+               and int(tok) == int(self.scfg.eos_id))
+        if eos:
+            self.stats["eos_exits"] += 1
+        if slot.generated >= slot.max_new or eos:
             rid = slot.rid
             self._finished[rid] = np.asarray(self._out.pop(rid), np.int32)
             self.stats["finished"] += 1
             events["finished"].append(rid)
+            self._slot_req.pop(slot.index, None)
+            if self.kv_mode == "paged":
+                # Immediate reclaim: the slot's pages return to the pool
+                # the step the request ends, not when the slot refills.
+                self.blocks.release(slot.index)
             self.sched.release(slot)
 
     def _prefill_slot(self, slot: Slot, req: Request) -> int:
@@ -379,11 +582,19 @@ class ServeEngine:
         batch: Dict[str, jax.Array] = {"tokens": jnp.asarray(toks)}
         if req.enc_embeds is not None:
             batch["enc_embeds"] = jnp.asarray(req.enc_embeds)
-        fresh = init_cache(self.cfg, 1, self.scfg.max_len,
+        fresh = init_cache(self.cfg, 1, self._fresh_len,
                            enc_len=self.scfg.enc_len)
         logits, one = self._prefill_full(self.params, batch, fresh)
-        self.caches = self._insert(self.caches, one,
-                                   jnp.asarray(slot.index, jnp.int32))
+        if self.kv_mode == "paged":
+            # Scatter the dense scratch into the pool along this slot's
+            # block-table row (prompt pages; the tail lands on the null
+            # sink) — prefill *inserts pages*, decode appends rows.
+            self.caches = self._insert(
+                self.caches, one,
+                jnp.asarray(self.blocks.table[slot.index]))
+        else:
+            self.caches = self._insert(self.caches, one,
+                                       jnp.asarray(slot.index, jnp.int32))
         self.stats["prefills"] += 1
         slot.length = plen
         tok0 = int(np.asarray(jnp.argmax(logits[0, plen - 1])))
@@ -400,7 +611,11 @@ class ServeEngine:
         All B requests are admitted at the same step and decode in
         lockstep — the uniform-batch special case of the continuous
         loop, numerics-identical to the historical one-shot engine for
-        greedy decoding (row i never sees any other row's state).
+        greedy decoding (row i never sees any other row's state).  With
+        ``eos_id`` set, a row that exits early is right-padded with the
+        eos token to ``max_new`` so the result stays rectangular (the
+        pad *is* the stream's terminator; use submit()/drain() for the
+        unpadded ragged outputs).
         """
         self._check_open("generate")
         b, s = prompts.shape
@@ -415,4 +630,12 @@ class ServeEngine:
                 np.asarray(enc_embeds[i:i + 1])
             rids.append(self.submit(prompts[i], max_new, enc_embeds=ee))
         res = self.drain()
-        return np.stack([res[r] for r in rids])
+        rows = []
+        for r in rids:
+            row = res[r]
+            if row.size < max_new:          # EOS early exit
+                row = np.concatenate(
+                    [row, np.full((max_new - row.size,), self.scfg.eos_id,
+                                  np.int32)])
+            rows.append(row)
+        return np.stack(rows)

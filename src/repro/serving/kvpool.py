@@ -1,0 +1,192 @@
+"""Paged KV cache: a global page pool + per-slot block tables.
+
+The dense engine reserves ``max_len`` KV rows per slot up front, so the
+effective batch is capped by the *worst-case* length, not live demand —
+exactly the over-reservation the paper's custom buffer placement exists
+to avoid (compute must never stall on memory reserved "just in case").
+This module replaces the per-slot reservation with the serving analogue
+of that discipline:
+
+* one **page pool** per attention layer — ``num_pages`` fixed-size
+  blocks of ``page_size`` tokens each, shared by every slot;
+* a per-slot **block table** mapping logical KV positions to pool
+  pages: position ``t`` of slot ``b`` lives at row ``t % page_size`` of
+  page ``block_table[b, t // page_size]``;
+* on-demand **append** during decode (a slot only holds pages covering
+  tokens it has actually produced) and immediate **reclaim** on
+  completion/eviction, so KV memory is proportional to *live tokens*,
+  not ``slots × max_len``.
+
+Everything here is host-side bookkeeping (pure Python/numpy, like the
+scheduler): page ids are decided outside jit and handed to the compiled
+decode step as a ``(B, max_pages)`` int32 block-table array.  Entries
+past a slot's allocated pages point at the pool's **null page** (index
+``num_pages`` — the pool arrays carry one extra sink page), so every
+table entry is always a valid index: dead entries write/read only the
+sink, and per-slot length masking makes anything there unreachable as
+attention history.
+
+Allocator invariants (enforced, and property-tested under random
+admit/complete interleavings):
+
+* the free list and the in-use set partition ``range(num_pages)`` at
+  all times — no leaks, no double allocation;
+* ``free()`` of a page that is not in use raises (double-free bug);
+* allocation order is deterministic (lowest free id first), so traces
+  replay identically.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+def pages_for(tokens: int, page_size: int) -> int:
+    """Pages needed to hold ``tokens`` KV rows.
+
+    >>> pages_for(1, 16), pages_for(16, 16), pages_for(17, 16)
+    (1, 1, 2)
+    >>> pages_for(0, 16)
+    0
+    """
+    return -(-tokens // page_size)
+
+
+class PagePool:
+    """Fixed-capacity page allocator with deterministic id order.
+
+    >>> p = PagePool(num_pages=4, page_size=16)
+    >>> p.alloc(2)
+    [0, 1]
+    >>> (p.free_pages, p.pages_in_use)
+    (2, 2)
+    >>> p.release([0]); p.alloc(1)   # lowest id first, freed ids reused
+    [0]
+    >>> p.high_water
+    2
+    """
+
+    def __init__(self, num_pages: int, page_size: int):
+        if num_pages < 1:
+            raise ValueError(f"need at least one page, got {num_pages}")
+        if page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {page_size}")
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self.null_page = num_pages      # sink index (extra pool row)
+        self._free: List[int] = list(range(num_pages))  # kept sorted
+        self._used: set = set()
+        self.high_water = 0             # max pages_in_use ever seen
+        self.total_reclaimed = 0        # pages returned over the lifetime
+
+    # -- accounting ---------------------------------------------------------
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def pages_in_use(self) -> int:
+        return len(self._used)
+
+    def fits(self, n: int) -> bool:
+        return n <= len(self._free)
+
+    # -- alloc / release ----------------------------------------------------
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """Take the ``n`` lowest free page ids; None if the pool cannot
+        satisfy the request (caller decides: gate admission, or preempt)."""
+        if n < 0:
+            raise ValueError(f"alloc({n})")
+        if n > len(self._free):
+            return None
+        pages, self._free = self._free[:n], self._free[n:]
+        self._used.update(pages)
+        self.high_water = max(self.high_water, len(self._used))
+        return pages
+
+    def release(self, pages: List[int]) -> None:
+        """Return pages to the free list.  Double-free (or freeing a
+        never-allocated id) raises — that is a bookkeeping bug upstream,
+        and silently absorbing it would let two slots share a page."""
+        for p in pages:
+            if p not in self._used:
+                raise ValueError(
+                    f"release of page {p} which is not in use "
+                    f"(double free, or never allocated)")
+            self._used.remove(p)
+        self._free = sorted(self._free + list(pages))
+        self.total_reclaimed += len(pages)
+
+    def check(self) -> None:
+        """Assert the partition invariant (used by the property test)."""
+        free, used = set(self._free), self._used
+        assert not (free & used), f"page in both sets: {free & used}"
+        assert free | used == set(range(self.num_pages)), \
+            f"leaked pages: {set(range(self.num_pages)) - free - used}"
+        assert len(self._free) == len(free), "duplicate ids on free list"
+
+
+class BlockTables:
+    """Per-slot block tables over one :class:`PagePool`.
+
+    Owns the ``(n_slots, max_pages)`` int32 table handed to the compiled
+    decode step and the per-slot page lists behind it.  All layers share
+    one table: a page id indexes the same row of every layer's pool
+    (the pools are allocated congruently), so the allocator runs once
+    per sequence, not once per layer.
+    """
+
+    def __init__(self, pool: PagePool, n_slots: int, max_pages: int):
+        self.pool = pool
+        self.max_pages = max_pages
+        self.table = np.full((n_slots, max_pages), pool.null_page, np.int32)
+        self._slot_pages: Dict[int, List[int]] = {}
+
+    def slot_pages(self, slot: int) -> List[int]:
+        return self._slot_pages.get(slot, [])
+
+    def assign(self, slot: int, tokens: int) -> Optional[List[int]]:
+        """Allocate pages covering ``tokens`` rows for a freshly admitted
+        slot (any previous assignment must already be released).  None
+        if the pool cannot cover it."""
+        assert slot not in self._slot_pages, \
+            f"slot {slot} reassigned without release"
+        pages = self.pool.alloc(pages_for(tokens, self.pool.page_size))
+        if pages is None:
+            return None
+        self._slot_pages[slot] = pages
+        self.table[slot, :] = self.pool.null_page
+        self.table[slot, :len(pages)] = pages
+        return pages
+
+    def extend_to(self, slot: int, tokens: int) -> bool:
+        """Grow a slot's table to cover ``tokens`` rows (decode append).
+        False if the pool is exhausted — caller preempts and retries."""
+        pages = self._slot_pages.get(slot)
+        assert pages is not None, f"extend of unassigned slot {slot}"
+        need = pages_for(tokens, self.pool.page_size) - len(pages)
+        if need <= 0:
+            return True
+        if len(pages) + need > self.max_pages:
+            raise ValueError(
+                f"slot {slot} wants {len(pages) + need} pages "
+                f"> max_pages={self.max_pages}")
+        got = self.pool.alloc(need)
+        if got is None:
+            return False
+        self.table[slot, len(pages):len(pages) + need] = got
+        pages.extend(got)
+        return True
+
+    def release(self, slot: int) -> int:
+        """Reclaim every page the slot holds (completion / preemption);
+        its table row reverts to the null sink.  Returns pages freed."""
+        pages = self._slot_pages.pop(slot, [])
+        if pages:
+            self.pool.release(pages)
+        self.table[slot, :] = self.pool.null_page
+        return len(pages)

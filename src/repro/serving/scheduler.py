@@ -39,7 +39,7 @@ True
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, List, Optional
+from typing import Any, Callable, List, Optional
 
 FREE = "free"
 PREFILL = "prefill"
@@ -75,6 +75,8 @@ class Slot:
     length: int = 0             # valid KV prefix in this slot's cache row
     generated: int = 0
     max_new: int = 0
+    admit_seq: int = -1         # global admission order (preemption picks
+                                # the youngest — the largest admit_seq)
 
 
 class Scheduler:
@@ -89,6 +91,7 @@ class Scheduler:
             raise ValueError(f"need at least one slot, got {n_slots}")
         self.slots: List[Slot] = [Slot(index=i) for i in range(n_slots)]
         self.queue: List[Request] = []
+        self._admit_seq = 0
 
     # -- queue --------------------------------------------------------------
 
@@ -96,16 +99,39 @@ class Scheduler:
         self.queue.append(req)
         return req.rid
 
-    def admissible(self, step: int) -> List[Request]:
-        """Arrived requests that would fit in the currently free slots
-        (FIFO prefix — does not pop)."""
-        free = self.free_slots()
-        out = [r for r in self.queue if r.arrival <= step]
-        return out[:free]
+    def requeue(self, req: Request) -> None:
+        """Return a *preempted* request to the head of the queue: it was
+        admitted first among everything still waiting, and admitting it
+        first again keeps preemption FIFO-fair (no later request can
+        leapfrog a victim)."""
+        self.queue.insert(0, req)
 
-    def pop_admissible(self, step: int) -> List[Request]:
+    def admissible(self, step: int,
+                   fits: Optional[Callable[[Request], bool]] = None
+                   ) -> List[Request]:
+        """Arrived requests that would fit in the currently free slots
+        (FIFO prefix — does not pop).  ``fits`` adds a capacity gate
+        beyond slots (the paged engine passes a free-page check that
+        reserves cumulatively): the scan stops at the first arrived
+        request it rejects — strictly FIFO, so a small later request
+        can never starve a large earlier one."""
+        free = self.free_slots()
+        out: List[Request] = []
+        for r in self.queue:
+            if r.arrival > step:
+                continue
+            if len(out) >= free:
+                break
+            if fits is not None and not fits(r):
+                break
+            out.append(r)
+        return out
+
+    def pop_admissible(self, step: int,
+                       fits: Optional[Callable[[Request], bool]] = None
+                       ) -> List[Request]:
         """Remove and return the requests :meth:`admissible` selects."""
-        picked = self.admissible(step)
+        picked = self.admissible(step, fits=fits)
         for r in picked:
             self.queue.remove(r)
         return picked
@@ -128,18 +154,22 @@ class Scheduler:
                 slot.length = req.prompt_len
                 slot.generated = 0
                 slot.max_new = req.max_new
+                slot.admit_seq = self._admit_seq
+                self._admit_seq += 1
                 return slot
         raise RuntimeError("admit() with no free slot — call "
                            "admissible() first")
 
     def release(self, slot: Slot) -> None:
-        """Evict a finished (or cancelled) request; the slot's stale KV
-        is left in place — re-admission overwrites the whole cache row
-        and length masking hides anything beyond the new prefix."""
+        """Evict a finished (or cancelled/preempted) request; the slot's
+        stale KV is left in place — re-admission overwrites the whole
+        cache row and length masking hides anything beyond the new
+        prefix."""
         slot.state = FREE
         slot.rid = None
         slot.generated = 0
         slot.max_new = 0
+        slot.admit_seq = -1
 
     def done(self) -> bool:
         """True when nothing is queued and nothing is in flight."""

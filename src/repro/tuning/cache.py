@@ -29,6 +29,11 @@ Schema history (see docs/TUNING.md for the full notes):
   staggered-arrival trace on ``ServeEngine`` (tokens/s, stored as
   us-per-token).  Keyed per arch + max_len, not per GEMM shape.  v3
   files are discarded wholesale on load.
+* **v5** — ``serve`` configs gain ``page_size``: the paged-KV pool's
+  tokens-per-page granularity (``repro.serving.kvpool``; 0 = the dense
+  per-slot max_len layout), measured through the same staggered trace
+  with the candidate's KV layout live.  v4 files are discarded
+  wholesale on load.
 """
 
 from __future__ import annotations
@@ -39,7 +44,7 @@ import tempfile
 from pathlib import Path
 from typing import Any, Dict, Optional
 
-SCHEMA_VERSION = 4
+SCHEMA_VERSION = 5
 
 _ENV_VAR = "REPRO_TUNING_CACHE"
 

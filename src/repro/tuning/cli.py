@@ -17,8 +17,9 @@ Examples (full walkthrough in docs/TUNING.md)::
     python -m repro.tuning.cli tune --op decode --shape 4096,128
     python -m repro.tuning.cli tune --op wkv --shape 1024,64
 
-    # Continuous-batching slot count (schema v4): measured end to end
-    # through ServeEngine on a staggered trace of the arch's smoke
+    # Continuous-batching engine tunables (schema v5: batch_slots x
+    # paged-KV page_size; page_size 0 = dense layout): measured end to
+    # end through ServeEngine on a staggered trace of the arch's smoke
     # config; --shape is prompt_len,max_new.
     python -m repro.tuning.cli tune --op serve --arch smollm_360m \\
         --shape 8,8 --keep 2 --reps 1

@@ -212,9 +212,10 @@ def _serve_key(cfg, max_len: int, dt: str, backend: str, kind: str) -> str:
                      backend, kind, extra=f"arch{cfg.name}")
 
 
-def serve_slots(cfg, max_len: int, dtype) -> int:
-    """Best-known continuous-batching slot count for this arch/workload
-    (schema v4), falling back to the engine's historical default of 8."""
+def serve_config(cfg, max_len: int, dtype) -> ServeCandidate:
+    """Best-known continuous-batching engine tunables for this
+    arch/workload (schema v5: slot count + paged-KV page size), falling
+    back to the analytic prior (8 slots / 32-token pages)."""
     dt = canonical_dtype(dtype)
     backend, kind = backend_fingerprint()
     key = _serve_key(cfg, max_len, dt, backend, kind)
@@ -223,11 +224,26 @@ def serve_slots(cfg, max_len: int, dtype) -> int:
         return hit  # type: ignore[return-value]
     entry = get_cache().get(key)
     if entry is not None and "config" in entry:
-        slots = ServeCandidate.from_json(entry["config"]).slots
+        cand = ServeCandidate.from_json(entry["config"])
     else:
-        slots = prior.analytic_serve(max_len).slots
-    _MEMO[key] = slots
-    return slots
+        cand = prior.analytic_serve(max_len)
+    _MEMO[key] = cand
+    return cand
+
+
+def serve_slots(cfg, max_len: int, dtype) -> int:
+    """Best-known continuous-batching slot count (the engine's
+    ``batch_slots=0`` hook), falling back to the historical 8."""
+    return serve_config(cfg, max_len, dtype).slots
+
+
+def serve_page_size(cfg, max_len: int, dtype) -> int:
+    """Best-known paged-KV page size for a ``kv="paged"`` engine
+    (``ServeConfig.page_size = 0`` hook).  A tuned *dense* winner
+    (page_size 0) falls back to the analytic 32: the caller already
+    chose the paged layout, it only asks for the granularity."""
+    tuned = serve_config(cfg, max_len, dtype).page_size
+    return tuned if tuned > 0 else prior.analytic_serve(max_len).page_size
 
 
 def warm_gemm_shapes(shapes: Sequence[Tuple[int, int, int]], dtype) -> int:
@@ -452,12 +468,14 @@ def tune_serve(cfg, *, max_len: int = 64, prompt_len: int = 8,
                stagger: int = 2, keep: int = 3, warmup: int = 0,
                reps: int = 1, force: bool = False,
                cache: Optional[TuningCache] = None) -> TuneResult:
-    """Tune the continuous-batching slot count (schema v4 ``serve`` op)
-    for one model config: each surviving candidate runs a full
-    staggered-arrival trace through ``ServeEngine`` and is scored on
-    measured us-per-token (i.e. tokens/s), with completeness as the
-    numerics gate.  ``cfg`` is a ``ModelConfig`` (use the smoke config
-    of an arch — the tunable transfers by keying on arch + max_len)."""
+    """Tune the continuous-batching engine (schema v5 ``serve`` op:
+    slot count x paged-KV page size) for one model config: each
+    surviving candidate runs a full staggered-arrival trace through
+    ``ServeEngine`` — with the candidate's KV layout live — and is
+    scored on measured us-per-token (i.e. tokens/s), with completeness
+    as the numerics gate.  ``cfg`` is a ``ModelConfig`` (use the smoke
+    config of an arch — the tunable transfers by keying on arch +
+    max_len)."""
     from repro.tuning import runner
     dt = canonical_dtype(cfg.cdtype)
     backend, kind = backend_fingerprint()
@@ -466,7 +484,7 @@ def tune_serve(cfg, *, max_len: int = 64, prompt_len: int = 8,
     hit = _cached_result(key, tc, force)
     if hit is not None:
         return hit
-    space = DesignSpace.serve()
+    space = DesignSpace.serve(max_len=max_len)
     survivors = prior.prune_serve(space, max_len, keep=keep)
     return _measure_and_store(
         key, tc, survivors,

@@ -239,11 +239,19 @@ SERVE_STEP_OVERHEAD = 8.0
 def serve_score(c: ServeCandidate, max_len: int) -> Tuple:
     """Sort key, higher = better.  Primary: modeled steady-state tokens
     per step-second — slots amortize the fixed per-step cost, with
-    diminishing returns once per-token work dominates.  Tiebreak: fewer
-    slots (each extra slot adds per-token latency and KV footprint
-    ``slots * max_len`` without throughput to show for it)."""
+    diminishing returns once per-token work dominates.  Then the KV
+    footprint the candidate binds per slot: a paged layout holds
+    ~half-occupied last pages instead of a full ``max_len`` row, so
+    smaller (nonzero) pages rank above larger ones and every paged
+    layout ranks above dense — the paper's buffer discipline as a
+    prior, which ``time_serve`` then checks empirically.  Tiebreak:
+    fewer slots."""
     thpt = c.slots / (SERVE_STEP_OVERHEAD + c.slots)
-    return (round(thpt * 1e6), -c.slots)
+    # Expected bound-but-dead KV rows per live request: half the last
+    # page (paged) vs the whole unreached tail (dense, ~max_len/2 for a
+    # uniform length mix).
+    waste = (c.page_size / 2) if c.page_size else (max_len / 2)
+    return (round(thpt * 1e6), -waste, -c.slots)
 
 
 def prune_serve(candidates: Sequence[ServeCandidate], max_len: int,
@@ -255,5 +263,8 @@ def prune_serve(candidates: Sequence[ServeCandidate], max_len: int,
 
 def analytic_serve(max_len: int) -> ServeCandidate:
     """Cache-miss fallback: the engine's historical default slot count
-    (``ServeConfig.batch_slots = 8``) — untuned behavior is unchanged."""
-    return ServeCandidate(slots=8)
+    (``ServeConfig.batch_slots = 8``) with the default paged-KV page
+    granularity (32 tokens — the middle of the 16..64 window; only
+    consulted when the engine runs ``kv="paged"``, so untuned *dense*
+    behavior is unchanged)."""
+    return ServeCandidate(slots=8, page_size=32)

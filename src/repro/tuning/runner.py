@@ -252,8 +252,14 @@ def time_serve(cand: ServeCandidate, cfg, max_len: Optional[int] = None,
                          f"{max_len}")
     n_req = requests if requests is not None else max(4, 2 * cand.slots)
     params = init_params(jax.random.PRNGKey(0), cfg)
+    # The candidate's KV layout runs live: page_size > 0 builds the
+    # paged engine (kvpool page pool + block tables; archs it cannot
+    # cover transparently fall back to dense inside the engine),
+    # page_size == 0 the dense per-slot layout.
     engine = ServeEngine(cfg, params, ServeConfig(
-        batch_slots=cand.slots, max_len=max_len, pretune=False))
+        batch_slots=cand.slots, max_len=max_len, pretune=False,
+        kv="paged" if cand.page_size > 0 else "dense",
+        page_size=cand.page_size))
     rng = np.random.default_rng(0)
     prompts = rng.integers(0, cfg.vocab_size,
                            size=(n_req, prompt_len)).astype(np.int32)

@@ -106,17 +106,22 @@ class WkvCandidate:
 
 @dataclasses.dataclass(frozen=True)
 class ServeCandidate:
-    """Slot count of the continuous-batching engine's persistent KV
-    cache (schema v4): how many requests decode per batched step."""
+    """Continuous-batching engine tunables (schema v5): ``slots`` is
+    how many requests decode per batched step; ``page_size`` is the
+    paged-KV pool's tokens-per-page granularity (0 = dense per-slot
+    max_len reservation — the pre-kvpool layout).  Schema v4 lacked
+    ``page_size``."""
 
     slots: int
+    page_size: int = 0
 
     def to_json(self) -> dict:
         return dataclasses.asdict(self)
 
     @classmethod
     def from_json(cls, d: dict) -> "ServeCandidate":
-        return cls(slots=int(d["slots"]))
+        return cls(slots=int(d["slots"]),
+                   page_size=int(d.get("page_size", 0)))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -250,20 +255,30 @@ class DesignSpace:
         return [DecodeCandidate(bk=bk) for bk in sorted(blocks)]
 
     SERVE_SLOTS: Sequence[int] = (1, 2, 4, 8, 16, 32)
+    SERVE_PAGE_SIZES: Sequence[int] = (0, 16, 32, 64)   # 0 = dense KV
 
     @classmethod
-    def serve(cls, max_slots: int = 32) -> List["ServeCandidate"]:
-        """Slot counts for the continuous-batching engine: powers of two
-        up to ``max_slots``.  Always includes the engine's untuned
-        default (8 slots) so tuning can never regress below the
-        fallback.
+    def serve(cls, max_slots: int = 32,
+              max_len: int = 0) -> List["ServeCandidate"]:
+        """Slot counts (powers of two up to ``max_slots``) crossed with
+        the paged-KV page size (0 keeps the dense layout; pages larger
+        than the workload's max_len would hold a single partial page
+        and are excluded when ``max_len`` is given).  Always includes
+        the engine's untuned default (8 slots, dense) so tuning can
+        never regress below the fallback.
 
-        >>> [c.slots for c in DesignSpace.serve(max_slots=4)]
+        >>> [c.slots for c in DesignSpace.serve(max_slots=4)
+        ...  if c.page_size == 0]
         [1, 2, 4, 8]
+        >>> sorted({c.page_size for c in DesignSpace.serve(max_len=24)})
+        [0, 16, 32]
         """
         slots = {s for s in cls.SERVE_SLOTS if s <= max(max_slots, 1)}
         slots.add(8)
-        return [ServeCandidate(slots=s) for s in sorted(slots)]
+        pages = [p for p in cls.SERVE_PAGE_SIZES
+                 if max_len <= 0 or p == 0 or p < 2 * max_len]
+        return [ServeCandidate(slots=s, page_size=p)
+                for s in sorted(slots) for p in pages]
 
     @classmethod
     def wkv(cls, t: int, n: int) -> List["WkvCandidate"]:

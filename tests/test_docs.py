@@ -27,6 +27,7 @@ DOCTEST_MODULES = [
     "repro.distributed.pack_gemm",
     "repro.serving.scheduler",
     "repro.serving.engine",
+    "repro.serving.kvpool",
 ]
 
 
