@@ -68,6 +68,16 @@ def emit(name: str, us: float, derived: str) -> None:
     print(f"{name},{us:.1f},{derived}")
 
 
+def _gemm_eff(m: int, k: int, n: int, us: float,
+              dtype: str = "float32") -> str:
+    """``eff=`` column: achieved GEMM FLOP/s over the analytic device
+    peak (repro.obs.efficiency) — the paper's %-of-peak figure.  On the
+    CPU-interpret backend this is honestly minuscule; the perf gate
+    tracks it as a run-over-run ratio per backend."""
+    from repro.obs.efficiency import gemm_efficiency
+    return f"eff={gemm_efficiency(m, k, n, us, dtype):.2e}"
+
+
 # ---------------------------------------------------------------------------
 # Paper tables
 # ---------------------------------------------------------------------------
@@ -184,7 +194,7 @@ def bench_kernels() -> None:
         ops.matmul(a, b, mode="kernel")), reps=2)
     err = float(np.max(np.abs(out - np.asarray(ref.ref_gemm(a, b)))))
     emit("kernel.gama_gemm.f32.256x512x256", us,
-         f"interpret_maxerr={err:.2e}")
+         f"interpret_maxerr={err:.2e} {_gemm_eff(256, 512, 256, us)}")
 
     ai = jnp.asarray(rng.integers(-128, 128, size=(128, 256)), jnp.int8)
     bi = jnp.asarray(rng.integers(-128, 128, size=(256, 128)), jnp.int8)
@@ -193,7 +203,8 @@ def bench_kernels() -> None:
                    mode="kernel")), reps=2)
     exact = bool((out == np.asarray(ref.ref_gemm(
         ai, bi, out_dtype=jnp.int8, scale=0.002))).all())
-    emit("kernel.gama_gemm.int8toint8.128x256x128", us, f"exact={exact}")
+    emit("kernel.gama_gemm.int8toint8.128x256x128", us,
+         f"exact={exact} {_gemm_eff(128, 256, 128, us, 'int8')}")
 
     q = jnp.asarray(rng.normal(size=(1, 4, 128, 64)), jnp.float32)
     k = jnp.asarray(rng.normal(size=(1, 2, 128, 64)), jnp.float32)
@@ -315,7 +326,8 @@ def bench_pack_gemm() -> None:
         vs = (f" vs_ring={best['ring'] / best[name]:.2f}x"
               if name == "overlap" and "ring" in best else "")
         emit(f"pack.gemm.p2q4.{name}", best[name],
-             f"maxerr={errs[name]:.2e}{vs}")
+             f"maxerr={errs[name]:.2e}{vs} "
+             f"{_gemm_eff(384, 3072, 384, best[name])}")
     # Grid sweep under the first selected schedule (p=1 has no reduce).
     sweep_name, sweep_kw = _selected_schedules()[0]
     for (p, q) in [(1, 8), (4, 2), (8, 1)]:
@@ -327,7 +339,7 @@ def bench_pack_gemm() -> None:
         us = _best_of(lambda: np.asarray(fn(a, b)), reps=3)
         err = float(np.max(np.abs(out - want)))
         emit(f"pack.gemm.p{p}q{q}.{sweep_name if p > 1 else 'psum'}", us,
-             f"maxerr={err:.2e}")
+             f"maxerr={err:.2e} {_gemm_eff(384, 3072, 384, us)}")
 
 
 def bench_pack_tuning() -> None:
@@ -407,11 +419,13 @@ def bench_serve_trace() -> None:
     try:
         run_trace(engine, trace, log=None)          # compile warmup
         rep = run_trace(engine, trace, log=None)
+        from repro.obs.efficiency import serve_efficiency
         kv_kib = engine.kv_bytes_reserved() / 1024
         emit("serve.continuous.s4", rep["wall_s"] * 1e6 / rep["tokens"],
              f"tok_s={rep['tok_s']:.1f} p50={rep['p50_ms']:.2f}ms "
              f"p99={rep['p99_ms']:.2f}ms shared_steps={rep['shared_steps']} "
-             f"decode_steps={rep['decode_steps']} kv_kib={kv_kib:.0f}")
+             f"decode_steps={rep['decode_steps']} kv_kib={kv_kib:.0f} "
+             f"eff={serve_efficiency(cfg, rep['tok_s']):.2e}")
         # Serialized baseline: same engine, same requests, grouped into
         # uniform one-shot batches (arrivals ignored — the baseline gets
         # every benefit of the doubt); each batch decodes to its longest
@@ -441,13 +455,15 @@ def bench_serve_trace() -> None:
                 toks, prep["results"][tid],
                 err_msg=f"paged diverged from dense (trace id {tid})")
         hwm_kib = prep["kv_bytes_hwm"] / 1024
+        from repro.obs.efficiency import serve_efficiency
         emit("serve.paged.s4", prep["wall_s"] * 1e6 / prep["tokens"],
              f"tok_s={prep['tok_s']:.1f} p50={prep['p50_ms']:.2f}ms "
              f"p99={prep['p99_ms']:.2f}ms page=16 "
              f"pages_hwm={prep['pages_hwm']} "
              f"reclaimed={prep['pages_reclaimed']} "
              f"kv_hwm_kib={hwm_kib:.0f} "
-             f"dense_kib={kv_kib:.0f}")
+             f"dense_kib={kv_kib:.0f} "
+             f"eff={serve_efficiency(cfg, prep['tok_s']):.2e}")
     finally:
         paged.close()
 
@@ -490,7 +506,8 @@ def bench_array_gemm() -> None:
         out = np.asarray(fn(a, b))
         us = _best_of(lambda: np.asarray(fn(a, b)), reps=3, warmup=1)
         err = float(np.max(np.abs(out - want)))
-        emit(f"array.gemm.2x4.p{p}q{q}", us, f"maxerr={err:.2e}")
+        emit(f"array.gemm.2x4.p{p}q{q}", us,
+             f"maxerr={err:.2e} {_gemm_eff(256, 256, 128, us)}")
 
 
 def bench_array_serve() -> None:

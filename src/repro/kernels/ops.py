@@ -29,6 +29,7 @@ from repro.kernels.decode_attention import flash_decode, flash_paged_decode
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.gemm import gama_gemm
 from repro.kernels.wkv import wkv6
+from repro.obs import count as _obs_count
 
 Mode = str  # "auto" | "kernel" | "ref"
 
@@ -100,11 +101,16 @@ def matmul(a: jax.Array, b: jax.Array, *, out_dtype=None, scale: float = 1.0,
         ctx = pg.get_pack_context()
         if ctx is not None and ctx.eligible(a.shape[0], a.shape[1],
                                             b.shape[1]):
+            # Route counters fire at trace time — one tick per compiled
+            # program per site, not per executed call.
+            _obs_count("ops.matmul.pack")
             return pg.pack_gemm(a, b, ctx.mesh, model_axis=ctx.model_axis,
                                 data_axis=ctx.data_axis,
                                 out_dtype=out_dtype, scale=scale, mode=mode)
     if not _use_kernel(mode):
+        _obs_count("ops.matmul.ref")
         return ref.ref_gemm(a, b, out_dtype=out_dtype, scale=scale)
+    _obs_count("ops.matmul.kernel")
     m, k = a.shape
     _, n = b.shape
     if tiles is None:
@@ -186,7 +192,9 @@ def decode(q: jax.Array, k: jax.Array, v: jax.Array, *,
         # pad region as valid history.
         length = jnp.minimum(length, sk)
     if not _use_kernel(mode):
+        _obs_count("ops.decode.ref")
         return ref.ref_decode_attention(q, k, v, length=length, scale=scale)
+    _obs_count("ops.decode.kernel")
     group = hq // hkv
     if bk is None:
         from repro.tuning import dispatch
@@ -242,8 +250,10 @@ def decode_paged(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array, *,
     length = jnp.minimum(length, block_tables.shape[1] * page_size)
     block_tables = jnp.asarray(block_tables, jnp.int32)
     if not _use_kernel(mode):
+        _obs_count("ops.decode_paged.ref")
         return ref.ref_paged_decode_attention(
             q, k_pages, v_pages, block_tables, length=length, scale=scale)
+    _obs_count("ops.decode_paged.kernel")
     group = hq // hkv
     gp = max(8, group)                  # sublane-pad the GQA group
     if gp != group:

@@ -59,6 +59,21 @@ def load_trace(path: str, vocab_size: int, seed: int = 0) -> List[dict]:
     return sorted(out, key=lambda r: (r["arrival"], r["id"]))
 
 
+def resolve_trace_path(name: str) -> str:
+    """``--trace`` accepts a filesystem path or a bare trace name; bare
+    names resolve to the repo's ``benchmarks/traces/<name>.jsonl``."""
+    import os
+    if os.path.exists(name):
+        return name
+    if os.sep not in name and not name.endswith(".jsonl"):
+        repo = os.path.dirname(os.path.dirname(os.path.dirname(
+            os.path.dirname(os.path.abspath(__file__)))))
+        cand = os.path.join(repo, "benchmarks", "traces", f"{name}.jsonl")
+        if os.path.exists(cand):
+            return cand
+    return name
+
+
 def synth_trace(requests: int, prompt_len: int, max_new: int,
                 stagger: int, vocab_size: int, seed: int = 0
                 ) -> List[dict]:
@@ -77,8 +92,15 @@ def run_trace(engine, trace: List[dict],
               log: Optional[Callable[[str], None]] = print) -> dict:
     """Replay ``trace`` through the continuous-batching loop.  Returns
     {results: {trace_id: tokens}, wall_s, tokens, tok_s, p50_ms, p99_ms,
-    shared_steps}; per-token latency is the wall time of the engine step
-    that emitted the token."""
+    ttft_p50_ms, ttft_p99_ms, shared_steps, ...}.
+
+    Latency attribution is split by phase: ``p50/p99_ms`` cover
+    *decode-only* inter-token latency (each decoded token is charged the
+    step's batched-decode duration), while ``ttft_p50/p99_ms`` cover
+    time-to-first-token (runnable -> first emission, which absorbs queue
+    wait + prefill).  Charging a mixed prefill+decode step's whole wall
+    time to every token it emitted — the old scheme — let one admission
+    pollute the inter-token p99 of every in-flight request."""
     log = log or (lambda s: None)
     rid_to_tid = {}
     # Trace arrivals are relative to the replay's start: offset by the
@@ -89,7 +111,8 @@ def run_trace(engine, trace: List[dict],
         rid = engine.submit(t["prompt"], t["max_new"],
                             arrival=base + t["arrival"])
         rid_to_tid[rid] = t["id"]
-    token_lat: List[float] = []
+    token_lat: List[float] = []     # decode-only, seconds
+    ttft: List[float] = []          # runnable -> first token, seconds
     paged = engine.kv_mode == "paged"
     # Per-replay deltas: the engine's counters are lifetime-cumulative,
     # and a bench replays the same trace on a warm engine.
@@ -98,11 +121,10 @@ def run_trace(engine, trace: List[dict],
     t0 = time.monotonic()
     while not engine.sched.done():
         reclaimed0 = engine.pool.total_reclaimed if paged else 0
-        s0 = time.monotonic()
         ev = engine.step()
-        dt = time.monotonic() - s0
-        emitted = len(ev["admitted"]) + len(ev["decoded"])
-        token_lat += [dt] * emitted
+        dt = ev["timings"]["decode_ms"] / 1e3
+        token_lat += [dt] * len(ev["decoded"])
+        ttft += [ms / 1e3 for ms in ev["ttft_ms"].values()]
         older = sorted(set(ev["decoded"]) - set(ev["admitted"]))
         if ev["admitted"] and older:
             log(f"[serve] step={engine.step_count - 1} "
@@ -130,8 +152,14 @@ def run_trace(engine, trace: List[dict],
         "wall_s": wall,
         "tokens": tokens,
         "tok_s": tokens / wall if wall > 0 else float("inf"),
-        "p50_ms": float(np.percentile(token_lat, 50) * 1e3),
-        "p99_ms": float(np.percentile(token_lat, 99) * 1e3),
+        "p50_ms": float(np.percentile(token_lat, 50) * 1e3)
+        if token_lat else float("nan"),
+        "p99_ms": float(np.percentile(token_lat, 99) * 1e3)
+        if token_lat else float("nan"),
+        "ttft_p50_ms": float(np.percentile(ttft, 50) * 1e3)
+        if ttft else float("nan"),
+        "ttft_p99_ms": float(np.percentile(ttft, 99) * 1e3)
+        if ttft else float("nan"),
         "shared_steps": engine.stats["shared_steps"],
         "decode_steps": engine.stats["decode_steps"],
         "kv_bytes_hwm": engine.kv_bytes_high_water(),
@@ -156,8 +184,19 @@ def main() -> None:
     ap.add_argument("--stagger", type=int, default=3,
                     help="arrival gap between requests, in engine steps")
     ap.add_argument("--trace", type=str, default=None,
-                    help="JSONL trace file (overrides --requests/"
-                         "--prompt_len/--stagger)")
+                    help="JSONL trace file, or a bare name resolved to "
+                         "benchmarks/traces/<name>.jsonl (overrides "
+                         "--requests/--prompt_len/--stagger)")
+    ap.add_argument("--trace-out", type=str, default=None,
+                    help="write a Chrome-trace-event JSON of the run "
+                         "(open in chrome://tracing or ui.perfetto.dev); "
+                         "enables span recording for this run")
+    ap.add_argument("--metrics-out", type=str, default=None,
+                    help="write the schema-1 metrics snapshot JSON "
+                         "(TTFT/inter-token histograms, kvpool gauges, "
+                         "roofline efficiency; see docs/OBSERVABILITY.md)")
+    ap.add_argument("--prom-out", type=str, default=None,
+                    help="write the metrics as Prometheus text exposition")
     ap.add_argument("--kv", choices=("dense", "paged"), default="dense",
                     help="KV layout: dense per-slot max_len rows, or "
                          "the kvpool page pool + block tables")
@@ -190,14 +229,21 @@ def main() -> None:
 
     import jax
 
-    from repro import configs as C
+    from repro import configs as C, obs
     from repro.models import init_params
     from repro.serving.engine import ServeConfig, ServeEngine
+
+    # Fresh metrics for this run; span recording only when a trace is
+    # actually being written (spans cost a clock read each).
+    bundle = obs.configure(
+        registry=obs.Registry(),
+        tracer=obs.Tracer(enabled=args.trace_out is not None))
 
     cfg = C.get_smoke(args.arch) if args.smoke else C.get(args.arch)
     params = init_params(jax.random.PRNGKey(1), cfg)
     if args.trace:
-        trace = load_trace(args.trace, cfg.vocab_size, seed=args.seed)
+        trace = load_trace(resolve_trace_path(args.trace),
+                           cfg.vocab_size, seed=args.seed)
     else:
         trace = synth_trace(args.requests, args.prompt_len, args.max_new,
                             args.stagger, cfg.vocab_size, seed=args.seed)
@@ -220,9 +266,19 @@ def main() -> None:
         print(f"[serve] {rep['tokens']} tokens in {rep['wall_s']:.2f}s "
               f"({rep['tok_s']:.1f} tok/s incl. compile) "
               f"p50={rep['p50_ms']:.1f}ms p99={rep['p99_ms']:.1f}ms "
+              f"ttft_p50={rep['ttft_p50_ms']:.1f}ms "
+              f"ttft_p99={rep['ttft_p99_ms']:.1f}ms "
               f"shared_steps={rep['shared_steps']} "
               f"decode_steps={rep['decode_steps']} arch={cfg.name} "
               f"slots={engine.scfg.batch_slots}")
+        # The paper's %-of-peak analogue: achieved decode throughput
+        # over the analytic device peak (VE2802 reference off-TPU).
+        eff = obs.efficiency.serve_efficiency(cfg, rep["tok_s"])
+        bundle.registry.gauge(
+            "serve.efficiency",
+            "achieved decode throughput / analytic peak").set(eff)
+        print(f"[serve] efficiency={eff:.3e} of analytic peak "
+              f"(backend={jax.default_backend()})")
         if engine.kv_mode == "paged":
             print(f"[serve] paged kv: page_size={engine.pool.page_size} "
                   f"pool={engine.pool.num_pages} pages "
@@ -237,6 +293,26 @@ def main() -> None:
                   f"non-attention state — dense layout in effect")
         if args.verify:
             _verify(cfg, params, trace, rep["results"], engine.scfg)
+        if args.trace_out:
+            n = bundle.tracer.write(args.trace_out)
+            obs.validate_chrome_trace(bundle.tracer.chrome_trace())
+            print(f"[serve] wrote {n} trace events -> {args.trace_out} "
+                  f"(open in chrome://tracing or ui.perfetto.dev)")
+        if args.metrics_out:
+            run_section = {k: v for k, v in rep.items() if k != "results"}
+            run_section["arch"] = cfg.name
+            run_section["kv_mode"] = engine.kv_mode
+            obs.write_metrics(
+                args.metrics_out, bundle.registry,
+                extra={"run": run_section},
+                required_histograms=("serve.ttft_ms",
+                                     "serve.inter_token_ms"),
+                required_gauges=("kvpool.pages_in_use",
+                                 "serve.efficiency", "serve.kv_tokens"))
+            print(f"[serve] wrote metrics snapshot -> {args.metrics_out}")
+        if args.prom_out:
+            obs.write_prometheus(args.prom_out, bundle.registry)
+            print(f"[serve] wrote prometheus text -> {args.prom_out}")
     finally:
         engine.close()
 

@@ -31,6 +31,7 @@ admit more concurrent requests than the dense engine at equal memory.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Dict, List, Optional
 
 import jax
@@ -40,6 +41,7 @@ import numpy as np
 from repro.models import (decode_step, forward, init_cache,
                           init_paged_cache, paged_eligible, prefill)
 from repro.models.config import ModelConfig
+from repro.obs import get_obs
 from repro.serving.kvpool import BlockTables, PagePool, pages_for
 from repro.serving.scheduler import DECODE, Request, Scheduler, Slot
 
@@ -244,8 +246,33 @@ class ServeEngine:
                 lambda p, t, pos, c: decode_step(p, t, pos, cfg, c))
             self._insert = jax.jit(self._insert_slot)
         self._sample_slots = jax.jit(self._make_sampler())
+        # -- observability (repro.obs) ------------------------------------
+        # The engine instruments against the process bundle: metrics are
+        # always on (allocation-light), spans are live only when the
+        # entry point enabled the tracer (--trace-out).
+        obs = get_obs()
+        self._obs = obs
+        self._h_ttft = obs.registry.histogram(
+            "serve.ttft_ms", "runnable -> first token, per request")
+        self._h_itl = obs.registry.histogram(
+            "serve.inter_token_ms", "decode-phase wall time per token")
+        self._c_tokens = obs.registry.counter(
+            "serve.tokens_out", "tokens emitted")
+        self._c_rejects = obs.registry.counter(
+            "serve.admission_rejections",
+            "arrived requests deferred by the paged fits() gate")
+        self._g_active = obs.registry.gauge(
+            "serve.active_slots", "slots mid-decode")
+        self._g_kv_tokens = obs.registry.gauge(
+            "serve.kv_tokens", "KV rows bound to live requests")
+        # Register the pages gauge in both layouts so one snapshot schema
+        # covers dense and paged runs (dense holds no pages: stays 0).
+        obs.registry.gauge("kvpool.pages_in_use",
+                           "KV pages currently allocated")
+        if self.pool is not None:
+            self.pool.bind_metrics(obs.registry)
         # -- continuous-batching state (persistent across calls) ----------
-        self.sched = Scheduler(scfg.batch_slots)
+        self.sched = Scheduler(scfg.batch_slots, registry=obs.registry)
         self.caches = None            # allocated at first admission
         self.step_count = 0
         self._next_rid = 0
@@ -253,6 +280,8 @@ class ServeEngine:
         self._out: Dict[int, List[int]] = {}
         self._finished: Dict[int, np.ndarray] = {}
         self._slot_req: Dict[int, Request] = {}   # slot idx -> live Request
+        self._runnable_at: Dict[int, float] = {}  # rid -> perf_counter stamp
+        self._kv_tokens_hwm = 0       # live-token high-water (dense + paged)
         self.stats = {"admitted": 0, "finished": 0, "prefills": 0,
                       "decode_steps": 0, "shared_steps": 0,
                       "preemptions": 0, "eos_exits": 0}
@@ -325,12 +354,22 @@ class ServeEngine:
 
     def kv_bytes_high_water(self) -> int:
         """Peak attention-KV bytes actually *bound to live requests*:
-        ``pages_in_use`` high-water x page bytes (paged); the dense
-        layout binds its whole reservation up front."""
+        ``pages_in_use`` high-water x page bytes (paged), or the live
+        token high-water x per-token bytes (dense) — both measure
+        resident demand, so dense-vs-paged memory rows compare
+        like-for-like (the dense layout still *reserves* its full
+        ``slots x max_len`` footprint; see :meth:`kv_bytes_reserved`)."""
         per_tok = self.token_kv_bytes()
         if self.kv_mode == "paged":
             return self.pool.high_water * self.pool.page_size * per_tok
-        return self.kv_bytes_reserved()
+        return self._kv_tokens_hwm * per_tok
+
+    def _note_kv_tokens(self, live: int) -> None:
+        """Record the current live-token count (KV rows bound to active
+        requests) into the gauge and the engine's own high-water."""
+        if live > self._kv_tokens_hwm:
+            self._kv_tokens_hwm = live
+        self._g_kv_tokens.set(live)
 
     def _insert_slot(self, full, one, slot):
         """Overwrite slot ``slot`` of the persistent cache with a
@@ -406,10 +445,18 @@ class ServeEngine:
                     f"alone (raise ServeConfig.pool_pages)")
         rid = self._next_rid
         self._next_rid += 1
+        arrival = self.step_count if arrival is None else int(arrival)
         self.sched.submit(Request(
             rid=rid, prompt_len=int(prompt.size), max_new=int(max_new),
-            arrival=self.step_count if arrival is None else int(arrival),
-            prompt=prompt, enc_embeds=enc_embeds))
+            arrival=arrival, prompt=prompt, enc_embeds=enc_embeds))
+        tr = self._obs.tracer
+        tr.async_begin("request", rid, prompt_len=int(prompt.size),
+                       max_new=int(max_new))
+        tr.async_begin("queued", rid)
+        if arrival <= self.step_count:
+            # TTFT clock starts the moment the request is runnable;
+            # future arrivals are stamped when their step comes up.
+            self._runnable_at[rid] = time.perf_counter()
         return rid
 
     def step(self) -> Dict[str, List[int]]:
@@ -421,58 +468,92 @@ class ServeEngine:
         pass follows the decode, so pages/slots reclaimed *this step*
         (EOS / completion) are immediately reusable by queued requests.
         Returns the step's events ({admitted, decoded, finished,
-        preempted} request ids)."""
+        preempted} request ids, per-request ``ttft_ms`` for first
+        tokens, and the step's phase ``timings``)."""
         self._check_open("step")
         if self.caches is None:
             self.caches = self.new_cache()
+        tr = self._obs.tracer
+        t_step = time.perf_counter()
+        now = t_step
+        for r in self.sched.queue:
+            # Trace-replayed arrivals become runnable this step; their
+            # TTFT clock starts here, not at submit().
+            if r.arrival <= self.step_count and r.rid not in self._runnable_at:
+                self._runnable_at[r.rid] = now
         holdover = [s.rid for s in self.sched.active_slots()]
-        events: Dict[str, List[int]] = {"admitted": [], "decoded": [],
-                                        "finished": [], "preempted": []}
-        self._admit(events)
-        if self.kv_mode == "paged":
-            self._grow_pages(events)
-        active = self.sched.active_slots()
-        if active:
-            pos = np.zeros((self.scfg.batch_slots,), np.int32)
-            pos_cap = (self._fresh_len if self.kv_mode == "paged"
-                       else self.scfg.max_len) - 1
-            for s in self.sched.slots:
-                # Inactive slots decode garbage into their own dead rows
-                # (dense: replaced wholesale on re-admission; paged: the
-                # null sink page); the clamp only guards the bound.
-                pos[s.index] = min(s.length, pos_cap)
-            token_idx = np.zeros((self.scfg.batch_slots,), np.int32)
-            for s in active:
-                token_idx[s.index] = s.generated
+        events: Dict[str, Any] = {"admitted": [], "decoded": [],
+                                  "finished": [], "preempted": [],
+                                  "ttft_ms": {}}
+        with tr.span("engine.step", cat="engine", step=self.step_count):
+            with tr.span("admit", cat="engine"):
+                self._admit(events)
+            admit_ms = (time.perf_counter() - t_step) * 1e3
             if self.kv_mode == "paged":
-                logits, self.caches = self._decode(
-                    self.params, jnp.asarray(self._tok), jnp.asarray(pos),
-                    jnp.asarray(self.blocks.table), self.caches)
-            else:
-                logits, self.caches = self._decode(
-                    self.params, jnp.asarray(self._tok), jnp.asarray(pos),
-                    self.caches)
-            toks = np.asarray(self._sample_slots(logits,
-                                                 jnp.asarray(token_idx)))
-            self.stats["decode_steps"] += 1
-            if events["admitted"] and holdover:
-                # A mid-stream admission shared this decode step with
-                # older in-flight requests — the utilization win
-                # continuous batching exists for.
-                self.stats["shared_steps"] += 1
-            for s in active:
-                s.length += 1
-                self._tok[s.index] = toks[s.index]
-                events["decoded"].append(s.rid)
-                self._emit(s, int(toks[s.index]), events)
-        if events["finished"] or events["preempted"]:
-            # Same-step reuse: whatever the decode just freed can admit
-            # a queued request now (it joins the next decode step).
-            self._admit(events)
+                self._grow_pages(events)
+            active = self.sched.active_slots()
+            decode_ms = 0.0
+            if active:
+                pos = np.zeros((self.scfg.batch_slots,), np.int32)
+                pos_cap = (self._fresh_len if self.kv_mode == "paged"
+                           else self.scfg.max_len) - 1
+                for s in self.sched.slots:
+                    # Inactive slots decode garbage into their own dead
+                    # rows (dense: replaced wholesale on re-admission;
+                    # paged: the null sink page); the clamp only guards
+                    # the bound.
+                    pos[s.index] = min(s.length, pos_cap)
+                token_idx = np.zeros((self.scfg.batch_slots,), np.int32)
+                for s in active:
+                    token_idx[s.index] = s.generated
+                t_dec = time.perf_counter()
+                with tr.span("decode", cat="engine", batch=len(active)):
+                    if self.kv_mode == "paged":
+                        logits, self.caches = self._decode(
+                            self.params, jnp.asarray(self._tok),
+                            jnp.asarray(pos),
+                            jnp.asarray(self.blocks.table), self.caches)
+                    else:
+                        logits, self.caches = self._decode(
+                            self.params, jnp.asarray(self._tok),
+                            jnp.asarray(pos), self.caches)
+                    toks = np.asarray(
+                        self._sample_slots(logits, jnp.asarray(token_idx)))
+                decode_ms = (time.perf_counter() - t_dec) * 1e3
+                self.stats["decode_steps"] += 1
+                if events["admitted"] and holdover:
+                    # A mid-stream admission shared this decode step
+                    # with older in-flight requests — the utilization
+                    # win continuous batching exists for.
+                    self.stats["shared_steps"] += 1
+                # Peak resident KV this step: every active slot just
+                # wrote a row at position `length` (pre-increment).
+                self._note_kv_tokens(sum(s.length + 1 for s in active))
+                for s in active:
+                    s.length += 1
+                    self._tok[s.index] = toks[s.index]
+                    events["decoded"].append(s.rid)
+                    # Decode-only latency attribution: each token this
+                    # step cost one batched decode, not the mixed
+                    # prefill+decode wall time (TTFT carries that).
+                    self._h_itl.observe(decode_ms)
+                    self._emit(s, int(toks[s.index]), events)
+            if events["finished"] or events["preempted"]:
+                # Same-step reuse: whatever the decode just freed can
+                # admit a queued request now (joins the next decode).
+                with tr.span("admit", cat="engine"):
+                    self._admit(events)
+        self._note_kv_tokens(
+            sum(s.length for s in self.sched.active_slots()))
+        self._g_active.set(len(self.sched.active_slots()))
         self.step_count += 1
+        events["timings"] = {
+            "admit_ms": admit_ms, "decode_ms": decode_ms,
+            "step_ms": (time.perf_counter() - t_step) * 1e3,
+        }
         return events
 
-    def _admit(self, events: Dict[str, List[int]]) -> None:
+    def _admit(self, events: Dict[str, Any]) -> None:
         """Admission pass: free slots AND (paged) enough free pages for
         each prompt, reserved cumulatively in FIFO order."""
         fits = None
@@ -487,11 +568,15 @@ class ServeEngine:
                 # only to self-preempt in _grow_pages the same step.
                 need = pages_for(req.prompt_len + 1, self.pool.page_size)
                 if state["reserved"] + need > budget:
+                    self._c_rejects.inc()
                     return False
                 state["reserved"] += need
                 return True
+        tr = self._obs.tracer
         for req in self.sched.pop_admissible(self.step_count, fits=fits):
             slot = self.sched.admit(req)
+            tr.async_end("queued", req.rid)
+            tr.async_begin("decode", req.rid, slot=slot.index)
             if self.kv_mode == "paged":
                 pages = self.blocks.assign(slot.index, req.prompt_len)
                 assert pages is not None, "admission fits() reserved these"
@@ -500,6 +585,8 @@ class ServeEngine:
             self.stats["admitted"] += 1
             events["admitted"].append(req.rid)
             self._emit(slot, tok0, events)
+        self._note_kv_tokens(
+            sum(s.length for s in self.sched.active_slots()))
 
     def _grow_pages(self, events: Dict[str, List[int]]) -> None:
         """Before a paged decode, every active slot needs a table entry
@@ -520,7 +607,7 @@ class ServeEngine:
                 if victim is s:
                     break           # s yielded its own pages; skip it
 
-    def _preempt(self, slot: Slot, events: Dict[str, List[int]]) -> None:
+    def _preempt(self, slot: Slot, events: Dict[str, Any]) -> None:
         """Evict a mid-decode request to reclaim its pages: partial
         output is discarded and the original request returns to the
         head of the queue (greedy decoding regenerates the identical
@@ -533,6 +620,12 @@ class ServeEngine:
         self.sched.requeue(req)
         self.stats["preemptions"] += 1
         events["preempted"].append(rid)
+        tr = self._obs.tracer
+        tr.instant("preempt", cat="engine", rid=rid)
+        tr.async_end("decode", rid)
+        tr.async_begin("queued", rid)
+        # The regenerated stream re-measures TTFT from the eviction.
+        self._runnable_at[rid] = time.perf_counter()
 
     def drain(self) -> Dict[int, np.ndarray]:
         """Step until the queue and all slots are empty; returns (and
@@ -547,10 +640,18 @@ class ServeEngine:
         """Finished tokens for ``rid`` (None while still in flight)."""
         return self._finished.get(rid)
 
-    def _emit(self, slot: Slot, tok: int, events: Dict[str, List[int]]
+    def _emit(self, slot: Slot, tok: int, events: Dict[str, Any]
               ) -> None:
         self._out.setdefault(slot.rid, []).append(int(tok))
         slot.generated += 1
+        self._c_tokens.inc()
+        t0 = self._runnable_at.pop(slot.rid, None)
+        if t0 is not None:
+            # First token since the request became runnable (or since
+            # its last preemption): this IS the TTFT sample.
+            ttft_ms = (time.perf_counter() - t0) * 1e3
+            self._h_ttft.observe(ttft_ms)
+            events["ttft_ms"][slot.rid] = ttft_ms
         eos = (self.scfg.eos_id is not None
                and int(tok) == int(self.scfg.eos_id))
         if eos:
@@ -566,6 +667,9 @@ class ServeEngine:
                 # the step the request ends, not when the slot refills.
                 self.blocks.release(slot.index)
             self.sched.release(slot)
+            tr = self._obs.tracer
+            tr.async_end("decode", rid)
+            tr.async_end("request", rid, tokens=slot.generated, eos=eos)
 
     def _prefill_slot(self, slot: Slot, req: Request) -> int:
         """Prefill one admission into its slot: pad the prompt to its
@@ -577,28 +681,31 @@ class ServeEngine:
         plen = req.prompt_len
         bucket = (plen if self._exact_prefill
                   else _bucket_for(plen, self.scfg.max_len))
-        toks = np.zeros((1, bucket), np.int32)
-        toks[0, :plen] = req.prompt
-        batch: Dict[str, jax.Array] = {"tokens": jnp.asarray(toks)}
-        if req.enc_embeds is not None:
-            batch["enc_embeds"] = jnp.asarray(req.enc_embeds)
-        fresh = init_cache(self.cfg, 1, self._fresh_len,
-                           enc_len=self.scfg.enc_len)
-        logits, one = self._prefill_full(self.params, batch, fresh)
-        if self.kv_mode == "paged":
-            # Scatter the dense scratch into the pool along this slot's
-            # block-table row (prompt pages; the tail lands on the null
-            # sink) — prefill *inserts pages*, decode appends rows.
-            self.caches = self._insert(
-                self.caches, one,
-                jnp.asarray(self.blocks.table[slot.index]))
-        else:
-            self.caches = self._insert(self.caches, one,
-                                       jnp.asarray(slot.index, jnp.int32))
-        self.stats["prefills"] += 1
-        slot.length = plen
-        tok0 = int(np.asarray(jnp.argmax(logits[0, plen - 1])))
-        self._tok[slot.index] = tok0
+        with self._obs.tracer.span("prefill", cat="engine", rid=req.rid,
+                                   plen=plen, bucket=bucket):
+            toks = np.zeros((1, bucket), np.int32)
+            toks[0, :plen] = req.prompt
+            batch: Dict[str, jax.Array] = {"tokens": jnp.asarray(toks)}
+            if req.enc_embeds is not None:
+                batch["enc_embeds"] = jnp.asarray(req.enc_embeds)
+            fresh = init_cache(self.cfg, 1, self._fresh_len,
+                               enc_len=self.scfg.enc_len)
+            logits, one = self._prefill_full(self.params, batch, fresh)
+            if self.kv_mode == "paged":
+                # Scatter the dense scratch into the pool along this
+                # slot's block-table row (prompt pages; the tail lands
+                # on the null sink) — prefill *inserts pages*, decode
+                # appends rows.
+                self.caches = self._insert(
+                    self.caches, one,
+                    jnp.asarray(self.blocks.table[slot.index]))
+            else:
+                self.caches = self._insert(
+                    self.caches, one, jnp.asarray(slot.index, jnp.int32))
+            self.stats["prefills"] += 1
+            slot.length = plen
+            tok0 = int(np.asarray(jnp.argmax(logits[0, plen - 1])))
+            self._tok[slot.index] = tok0
         return tok0
 
     # -- legacy one-shot API (reimplemented on the continuous loop) ---------

@@ -80,6 +80,19 @@ class PagePool:
         self._used: set = set()
         self.high_water = 0             # max pages_in_use ever seen
         self.total_reclaimed = 0        # pages returned over the lifetime
+        self._g_in_use = None           # bound obs gauge (bind_metrics)
+        self._c_reclaimed = None
+
+    def bind_metrics(self, registry) -> None:
+        """Mirror the pool's accounting into an obs registry: the
+        ``kvpool.pages_in_use`` gauge (its high-water is the
+        ``pages_hwm`` figure) and the ``kvpool.pages_reclaimed``
+        counter track every alloc/release from here on."""
+        self._g_in_use = registry.gauge(
+            "kvpool.pages_in_use", "KV pages currently allocated")
+        self._c_reclaimed = registry.counter(
+            "kvpool.pages_reclaimed", "KV pages returned to the pool")
+        self._g_in_use.set(len(self._used))
 
     # -- accounting ---------------------------------------------------------
 
@@ -106,6 +119,8 @@ class PagePool:
         pages, self._free = self._free[:n], self._free[n:]
         self._used.update(pages)
         self.high_water = max(self.high_water, len(self._used))
+        if self._g_in_use is not None:
+            self._g_in_use.set(len(self._used))
         return pages
 
     def release(self, pages: List[int]) -> None:
@@ -120,6 +135,9 @@ class PagePool:
             self._used.remove(p)
         self._free = sorted(self._free + list(pages))
         self.total_reclaimed += len(pages)
+        if self._g_in_use is not None:
+            self._g_in_use.set(len(self._used))
+            self._c_reclaimed.inc(len(pages))
 
     def check(self) -> None:
         """Assert the partition invariant (used by the property test)."""

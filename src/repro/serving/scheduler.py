@@ -86,17 +86,34 @@ class Scheduler:
     admissible requests, submission order wins (FIFO — no starvation).
     """
 
-    def __init__(self, n_slots: int):
+    def __init__(self, n_slots: int, registry=None):
         if n_slots < 1:
             raise ValueError(f"need at least one slot, got {n_slots}")
         self.slots: List[Slot] = [Slot(index=i) for i in range(n_slots)]
         self.queue: List[Request] = []
         self._admit_seq = 0
+        # Optional obs registry (repro.obs.metrics.Registry); the engine
+        # passes the process bundle's, direct constructions stay silent.
+        self._c_submitted = self._c_requeued = self._g_depth = None
+        if registry is not None:
+            self._c_submitted = registry.counter(
+                "sched.submitted", "requests queued")
+            self._c_requeued = registry.counter(
+                "sched.requeued", "preempted requests returned to queue")
+            self._g_depth = registry.gauge(
+                "sched.queue_depth", "requests waiting for a slot")
+
+    def _sample_depth(self) -> None:
+        if self._g_depth is not None:
+            self._g_depth.set(len(self.queue))
 
     # -- queue --------------------------------------------------------------
 
     def submit(self, req: Request) -> int:
         self.queue.append(req)
+        if self._c_submitted is not None:
+            self._c_submitted.inc()
+        self._sample_depth()
         return req.rid
 
     def requeue(self, req: Request) -> None:
@@ -105,6 +122,9 @@ class Scheduler:
         first again keeps preemption FIFO-fair (no later request can
         leapfrog a victim)."""
         self.queue.insert(0, req)
+        if self._c_requeued is not None:
+            self._c_requeued.inc()
+        self._sample_depth()
 
     def admissible(self, step: int,
                    fits: Optional[Callable[[Request], bool]] = None
@@ -134,6 +154,8 @@ class Scheduler:
         picked = self.admissible(step, fits=fits)
         for r in picked:
             self.queue.remove(r)
+        if picked:
+            self._sample_depth()
         return picked
 
     # -- slots --------------------------------------------------------------

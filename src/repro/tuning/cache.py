@@ -123,7 +123,11 @@ class TuningCache:
 
     def get(self, key: str) -> Optional[Dict[str, Any]]:
         self._ensure_loaded()
-        return self.entries.get(key)
+        entry = self.entries.get(key)
+        from repro.obs import count
+        count("tuning.cache_hit" if entry is not None
+              else "tuning.cache_miss")
+        return entry
 
     def put(self, key: str, entry: Dict[str, Any]) -> None:
         self._ensure_loaded()

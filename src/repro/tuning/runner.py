@@ -52,13 +52,19 @@ def measure_fn(fn: Callable[[], object], warmup: int = 1,
     ``fn`` must materialize its result (np.asarray) so async dispatch
     cannot hide the work.
     """
-    for _ in range(max(0, warmup)):
-        fn()
-    out: List[float] = []
-    for _ in range(max(1, reps)):
-        t0 = time.perf_counter()
-        fn()
-        out.append((time.perf_counter() - t0) * 1e6)
+    from repro.obs import get_obs
+    obs = get_obs()
+    obs.registry.counter("tuning.measurements",
+                         "candidate timing runs").inc()
+    with obs.tracer.span("tune.measure", cat="tuning",
+                         warmup=warmup, reps=reps):
+        for _ in range(max(0, warmup)):
+            fn()
+        out: List[float] = []
+        for _ in range(max(1, reps)):
+            t0 = time.perf_counter()
+            fn()
+            out.append((time.perf_counter() - t0) * 1e6)
     return out
 
 

@@ -9,7 +9,8 @@ hypothesis's shrinking and adaptive search.
 
 Supported surface (exactly what tests/ uses): ``given``, ``settings``
 with ``max_examples``/``deadline``, and strategies ``integers``,
-``sampled_from``, ``tuples``, ``composite``, plus ``.map``/``.filter``.
+``lists``, ``sampled_from``, ``tuples``, ``composite``, plus
+``.map``/``.filter``.
 """
 
 from __future__ import annotations
@@ -46,6 +47,13 @@ class _StrategiesNamespace:
     @staticmethod
     def integers(min_value: int, max_value: int) -> _Strategy:
         return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def lists(element: _Strategy, min_size: int = 0,
+              max_size: int = 10) -> _Strategy:
+        return _Strategy(
+            lambda rng: [element.example(rng)
+                         for _ in range(rng.randint(min_size, max_size))])
 
     @staticmethod
     def sampled_from(elements) -> _Strategy:

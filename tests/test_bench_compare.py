@@ -118,3 +118,82 @@ def test_zero_cost_info_rows_ignored(tmp_path):
     rows = bench_compare.load_rows(_write(tmp_path, "b.json", BASE))
     assert "pack.tune.cache" not in rows
     assert len(rows) == 3
+
+
+# ---------------------------------------------------------------------------
+# --metrics mode: repro.obs snapshot gating
+# ---------------------------------------------------------------------------
+
+MBASE = {
+    "schema": 1,
+    "counters": {"serve.tokens_out": 96.0, "tuning.cache_hit": 0.0},
+    "gauges": {"kvpool.pages_in_use": {"value": 0.0, "high_water": 9.0},
+               "serve.efficiency": {"value": 1.2e-07,
+                                    "high_water": 1.2e-07}},
+    "histograms": {"serve.inter_token_ms": {
+        "count": 90, "sum": 400.0, "min": 2.0, "max": 12.0,
+        "p50": 4.0, "p90": 8.0, "p99": 11.0}},
+    "run": {"tok_s": 50.0},
+}
+
+
+def _mdegraded(factor, key="p99"):
+    cand = copy.deepcopy(MBASE)
+    cand["histograms"]["serve.inter_token_ms"][key] *= factor
+    return cand
+
+
+def test_metrics_identical_passes(tmp_path):
+    b = _write(tmp_path, "m.json", MBASE)
+    assert bench_compare.main([b, b, "--metrics"]) == bench_compare.OK
+
+
+def test_metrics_degraded_ratio_fails(tmp_path):
+    b = _write(tmp_path, "mb.json", MBASE)
+    c = _write(tmp_path, "mc.json", _mdegraded(5.0))
+    assert bench_compare.main([b, c, "--metrics", "--tolerance", "3"]) \
+        == bench_compare.REGRESSION
+    assert bench_compare.main([b, c, "--metrics", "--tolerance", "6"]) \
+        == bench_compare.OK
+
+
+def test_metrics_filter_restricts_gate(tmp_path):
+    """A degraded histogram outside the filter must not gate."""
+    b = _write(tmp_path, "mb.json", MBASE)
+    cand = copy.deepcopy(MBASE)
+    cand["counters"]["serve.tokens_out"] *= 10.0
+    c = _write(tmp_path, "mc.json", cand)
+    assert bench_compare.main([b, c, "--metrics",
+                               "--filter", "inter_token"]) \
+        == bench_compare.OK
+    assert bench_compare.main([b, c, "--metrics"]) \
+        == bench_compare.REGRESSION
+    assert bench_compare.main([b, c, "--metrics",
+                               "--filter", "no.such.metric"]) \
+        == bench_compare.STRUCTURAL
+
+
+def test_metrics_lost_key_is_structural(tmp_path):
+    cand = copy.deepcopy(MBASE)
+    del cand["histograms"]["serve.inter_token_ms"]
+    b = _write(tmp_path, "mb.json", MBASE)
+    c = _write(tmp_path, "mc.json", cand)
+    assert bench_compare.main([b, c, "--metrics"]) \
+        == bench_compare.STRUCTURAL
+
+
+def test_metrics_zero_baseline_is_info_not_gated(tmp_path):
+    """A counter first appearing (baseline 0) is news, not a
+    regression — even at an infinite ratio."""
+    cand = copy.deepcopy(MBASE)
+    cand["counters"]["tuning.cache_hit"] = 40.0
+    b = _write(tmp_path, "mb.json", MBASE)
+    c = _write(tmp_path, "mc.json", cand)
+    assert bench_compare.main([b, c, "--metrics"]) == bench_compare.OK
+
+
+def test_metrics_non_snapshot_is_structural(tmp_path):
+    b = _write(tmp_path, "mb.json", MBASE)
+    bad = _write(tmp_path, "bad.json", BASE)  # bench JSON, not snapshot
+    assert bench_compare.main([b, bad, "--metrics"]) \
+        == bench_compare.STRUCTURAL

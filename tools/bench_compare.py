@@ -16,6 +16,18 @@ Usage::
     python tools/bench_compare.py BENCH_3.json BENCH_3_ci.json \
         [--ref pack.gemm.p2q4.ring] [--tolerance 2.5]
 
+``--metrics`` switches both inputs to **metrics snapshots** (the
+schema-1 JSON ``launch/serve.py --metrics-out`` writes, see
+``repro.obs.export``): every snapshot scalar — counters, gauge
+values/high-waters, histogram percentiles — is flattened to a dotted
+key and gated on the direct candidate/baseline ratio.  Ratio-of-two-
+snapshots is only noise-robust when both come from the *same machine
+and job* (e.g. the paged run vs the dense run of one CI job), so pair
+them accordingly and use ``--filter`` to gate the keys that matter::
+
+    python tools/bench_compare.py m_dense.json m_paged.json --metrics \
+        --filter serve.inter_token_ms --tolerance 3
+
 Exit codes: 0 ok, 1 perf regression, 2 structural problem (missing
 rows/reference, unreadable file) — both nonzero states fail CI.
 """
@@ -46,6 +58,73 @@ def load_rows(path: str) -> Dict[str, float]:
         if us > 0.0:
             out[str(row["name"])] = us
     return out
+
+
+def _flatten_snapshot(snap: dict) -> Dict[str, float]:
+    """Dotted-scalar view of a metrics snapshot, via repro.obs (adding
+    the repo's src/ to sys.path when run as a bare script)."""
+    try:
+        from repro.obs import flatten_snapshot
+    except ImportError:
+        import os
+        sys.path.insert(0, os.path.join(os.path.dirname(
+            os.path.dirname(os.path.abspath(__file__))), "src"))
+        from repro.obs import flatten_snapshot
+    return flatten_snapshot(snap)
+
+
+def load_metrics(path: str) -> Dict[str, float]:
+    """Flattened scalars of a schema-1 metrics snapshot."""
+    with open(path) as f:
+        snap = json.load(f)
+    if not isinstance(snap, dict) or "counters" not in snap:
+        raise ValueError(f"{path}: not a metrics snapshot "
+                         f"(no 'counters' section)")
+    return _flatten_snapshot(snap)
+
+
+def compare_metrics(base: Dict[str, float], cand: Dict[str, float],
+                    tolerance: float, filter_: str = "",
+                    out=sys.stdout) -> int:
+    """Direct candidate/baseline ratio per flattened snapshot key.
+    Keys whose baseline is 0 (or missing from the candidate while
+    filtered out) are reported but never gated — a counter appearing
+    for the first time is news, not a regression."""
+    if filter_:
+        base = {k: v for k, v in base.items() if filter_ in k}
+        cand = {k: v for k, v in cand.items() if filter_ in k}
+    if not base:
+        print(f"bench_compare: no metrics keys match "
+              f"filter {filter_!r}", file=out)
+        return STRUCTURAL
+    missing = sorted(set(base) - set(cand))
+    if missing:
+        print(f"bench_compare: candidate lost metrics: {missing}",
+              file=out)
+        return STRUCTURAL
+    status = OK
+    print(f"{'metric':44s} {'base':>11s} {'cand':>11s} "
+          f"{'x':>6s}  verdict", file=out)
+    for name in sorted(base):
+        b, c = base[name], cand[name]
+        if b <= 0:
+            print(f"{name:44s} {b:11.4g} {c:11.4g} {'-':>6s}  info",
+                  file=out)
+            continue
+        ratio = c / b
+        bad = ratio > tolerance
+        verdict = "REGRESSED" if bad else "ok"
+        print(f"{name:44s} {b:11.4g} {c:11.4g} {ratio:6.2f}  {verdict}",
+              file=out)
+        if bad:
+            status = REGRESSION
+    if status == REGRESSION:
+        print(f"bench_compare: FAIL — metrics above grew >{tolerance}x "
+              f"vs the baseline snapshot", file=out)
+    else:
+        print(f"bench_compare: ok ({len(base)} metrics within "
+              f"{tolerance}x of the baseline)", file=out)
+    return status
 
 
 def normalize(rows: Dict[str, float], ref: str) -> Dict[str, float]:
@@ -115,13 +194,24 @@ def main(argv=None) -> int:
     ap.add_argument("--filter", default="",
                     help="gate only rows containing this substring "
                          "(the --ref row is always kept)")
+    ap.add_argument("--metrics", action="store_true",
+                    help="inputs are repro.obs metrics snapshots; gate "
+                         "direct per-key ratios instead of "
+                         "reference-normalized bench rows")
     args = ap.parse_args(argv)
     try:
-        base = load_rows(args.baseline)
-        cand = load_rows(args.candidate)
+        if args.metrics:
+            mbase = load_metrics(args.baseline)
+            mcand = load_metrics(args.candidate)
+        else:
+            base = load_rows(args.baseline)
+            cand = load_rows(args.candidate)
     except (OSError, ValueError, KeyError) as e:
         print(f"bench_compare: {e}", file=sys.stdout)
         return STRUCTURAL
+    if args.metrics:
+        return compare_metrics(mbase, mcand, args.tolerance,
+                               filter_=args.filter)
     return compare(base, cand, args.ref, args.tolerance,
                    filter_=args.filter)
 
