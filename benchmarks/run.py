@@ -466,12 +466,45 @@ def bench_serve_trace() -> None:
              f"eff={serve_efficiency(cfg, prep['tok_s']):.2e}")
     finally:
         paged.close()
+    # int8 KV pages on the same trace: per-page-row scales shrink each
+    # cached token to d_head + 4 bytes (vs d_head * 4 in f32), so the
+    # live high-water must come in well under half the f32 paged run's.
+    # Quantization noise can flip a greedy near-tie, so the token
+    # streams are held to *completion + majority bit-identity* vs the
+    # f32 paged run, not exact equality (the tolerance story lives in
+    # tests/test_quant.py).
+    qpaged = ServeEngine(cfg, params, ServeConfig(
+        batch_slots=slots, max_len=max_len, kv="paged", page_size=16,
+        kv_dtype="int8"))
+    try:
+        run_trace(qpaged, trace, log=None)          # compile warmup
+        qrep = run_trace(qpaged, trace, log=None)
+        assert set(qrep["results"]) == set(prep["results"])
+        for t in trace:
+            assert len(qrep["results"][t["id"]]) == t["max_new"], t["id"]
+        same = sum(bool(np.array_equal(qrep["results"][tid], toks))
+                   for tid, toks in prep["results"].items())
+        assert same >= len(trace) - 2, \
+            f"int8 KV flipped {len(trace) - same}/{len(trace)} streams"
+        q_hwm_kib = qrep["kv_bytes_hwm"] / 1024
+        assert qrep["kv_bytes_hwm"] <= 0.5 * prep["kv_bytes_hwm"], \
+            (qrep["kv_bytes_hwm"], prep["kv_bytes_hwm"])
+        emit("serve.paged_int8.s4", qrep["wall_s"] * 1e6 / qrep["tokens"],
+             f"tok_s={qrep['tok_s']:.1f} p50={qrep['p50_ms']:.2f}ms "
+             f"p99={qrep['p99_ms']:.2f}ms page=16 kv_dtype=int8 "
+             f"pages_hwm={qrep['pages_hwm']} "
+             f"kv_hwm_kib={q_hwm_kib:.0f} "
+             f"f32_hwm_kib={hwm_kib:.0f} "
+             f"identical_streams={same}/{len(trace)} "
+             f"eff={serve_efficiency(cfg, qrep['tok_s']):.2e}")
+    finally:
+        qpaged.close()
 
 
 def bench_serve_tuning() -> None:
-    """The schema-v5 serve tunable: measure (batch_slots, page_size)
-    candidates end to end — dense and paged layouts compete on the same
-    trace — and persist the winner."""
+    """The schema-v6 serve tunable: measure (batch_slots, page_size,
+    kv_dtype) candidates end to end — dense, paged and int8-paged
+    layouts compete on the same trace — and persist the winner."""
     from repro import configs as C
     from repro.tuning import dispatch
     cfg = C.get_smoke("smollm_360m")

@@ -149,14 +149,56 @@ def flash_decode(
     return out.reshape(b, hq, d)
 
 
-def _paged_decode_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
-                         m_ref, l_ref, acc_ref, *,
+def _paged_page_step(q_ref, k, v, m_ref, l_ref, acc_ref, *,
+                     k_block_start, length, gp: int, page_size: int,
+                     scale: float):
+    """The online-softmax update for one dereferenced page.  ``k``/``v``
+    are the page's f32 values — already dequantized when the pool is
+    int8 — so every buffering/precision variant of the paged kernel
+    shares one arithmetic body and they stay bit-identical to each
+    other (asserted by the fuzz suite)."""
+    q = q_ref[0, 0].astype(jnp.float32)              # (gp, d)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale  # (gp, page_size)
+    k_pos = k_block_start + jax.lax.broadcasted_iota(
+        jnp.int32, (gp, page_size), 1)
+    valid = k_pos < length                           # partial-page mask
+    s = jnp.where(valid, s, _NEG_INF)
+
+    m_prev = m_ref[...][:, :1]
+    l_prev = l_ref[...][:, :1]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.where(valid, jnp.exp(s - m_new), 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = alpha * l_prev + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+    l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+
+def _dequant_page(kq, sq):
+    """Fused dequant epilogue of the int8 page load: (ps, d) int8 page x
+    (ps,) scale row -> f32 values, in-register (the page streamed from
+    HBM at int8 width — this is what makes int8 KV bandwidth-neutral)."""
+    return kq.astype(jnp.float32) * sq.reshape(-1, 1)
+
+
+def _paged_decode_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, *rest,
                          n_pages: int, page_size: int, gp: int,
-                         scale: float):
-    """One grid step = one page of one slot's block table.  The K/V refs
-    already hold the dereferenced page (the BlockSpec index map reads
-    the scalar-prefetched table), so the body is the dense kernel's
-    online-softmax with bk = page_size."""
+                         scale: float, quantized: bool):
+    """Single-buffer paged kernel: one grid step = one page of one
+    slot's block table.  The K/V refs already hold the dereferenced page
+    (the BlockSpec index map reads the scalar-prefetched table), so the
+    body is the dense kernel's online-softmax with bk = page_size.
+    Quantized pools carry two extra scale-row refs; dequant happens
+    in-body, fused with the logits matmul."""
+    if quantized:
+        ks_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref = rest
+    else:
+        o_ref, m_ref, l_ref, acc_ref = rest
     pi = pl.program_id(2)
 
     @pl.when(pi == 0)
@@ -169,32 +211,101 @@ def _paged_decode_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
     k_block_start = pi * page_size
 
     # Pages at or past the length are either the partial tail (handled
-    # by the in-block mask below) or unallocated table entries pointing
-    # at the pool's null sink — the guard skips the sink pages entirely.
+    # by the in-block mask) or unallocated table entries pointing at
+    # the pool's null sink — the guard skips the sink pages entirely.
     @pl.when(k_block_start < length)
     def _body():
-        q = q_ref[0, 0].astype(jnp.float32)          # (gp, d)
-        k = k_ref[0, 0].astype(jnp.float32)          # (page_size, d)
-        v = v_ref[0, 0].astype(jnp.float32)
-        s = jax.lax.dot_general(
-            q, k, (((1,), (1,)), ((), ())),
-            preferred_element_type=jnp.float32) * scale   # (gp, page_size)
-        k_pos = k_block_start + jax.lax.broadcasted_iota(
-            jnp.int32, (gp, page_size), 1)
-        valid = k_pos < length                       # partial-page mask
-        s = jnp.where(valid, s, _NEG_INF)
+        if quantized:
+            k = _dequant_page(k_ref[0, 0], ks_ref[0, 0])
+            v = _dequant_page(v_ref[0, 0], vs_ref[0, 0])
+        else:
+            k = k_ref[0, 0].astype(jnp.float32)      # (page_size, d)
+            v = v_ref[0, 0].astype(jnp.float32)
+        _paged_page_step(q_ref, k, v, m_ref, l_ref, acc_ref,
+                         k_block_start=k_block_start, length=length,
+                         gp=gp, page_size=page_size, scale=scale)
 
-        m_prev = m_ref[...][:, :1]
-        l_prev = l_ref[...][:, :1]
-        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
-        p = jnp.where(valid, jnp.exp(s - m_new), 0.0)
-        alpha = jnp.exp(m_prev - m_new)
-        l_new = alpha * l_prev + jnp.sum(p, axis=1, keepdims=True)
-        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
-            p, v, (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32)
-        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
-        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+    @pl.when(pi == n_pages - 1)
+    def _done():
+        l = l_ref[...][:, :1]
+        safe_l = jnp.where(l > 0.0, l, 1.0)
+        o_ref[0, 0] = (acc_ref[...] / safe_l).astype(o_ref.dtype)
+
+
+def _paged_decode_dbuf_kernel(bt_ref, len_ref, q_ref, k_hbm, v_hbm, *rest,
+                              n_pages: int, page_size: int, gp: int,
+                              scale: float, quantized: bool):
+    """Double-buffered paged kernel: the GAMA ping-pong (buff_0/buff_1)
+    DMA pipeline.  K/V pools stay in HBM (memory_space=ANY); each grid
+    step dereferences the block table itself and issues explicit async
+    copies into two VMEM page slots, starting page ``pi+1``'s copy
+    *before* waiting on page ``pi`` — the next page's KV loads overlap
+    this page's softmax/matmul.  The arithmetic body is shared with the
+    single-buffer kernel, so outputs are bit-identical."""
+    if quantized:
+        (ks_hbm, vs_hbm, o_ref, m_ref, l_ref, acc_ref,
+         k_buf, v_buf, ks_buf, vs_buf, sem) = rest
+    else:
+        o_ref, m_ref, l_ref, acc_ref, k_buf, v_buf, sem = rest
+    bb = pl.program_id(0)
+    h = pl.program_id(1)
+    pi = pl.program_id(2)
+
+    def page_copies(slot, page_idx):
+        """The (src, dst, sem) copy descriptors of one page gather.
+        ``.start()`` on all of them issues the slot's DMAs; ``.wait()``
+        blocks until the slot holds the page."""
+        page = bt_ref[bb, page_idx]
+        copies = [
+            pltpu.make_async_copy(k_hbm.at[page, h], k_buf.at[slot],
+                                  sem.at[0, slot]),
+            pltpu.make_async_copy(v_hbm.at[page, h], v_buf.at[slot],
+                                  sem.at[1, slot]),
+        ]
+        if quantized:
+            copies += [
+                pltpu.make_async_copy(ks_hbm.at[page, h], ks_buf.at[slot],
+                                      sem.at[2, slot]),
+                pltpu.make_async_copy(vs_hbm.at[page, h], vs_buf.at[slot],
+                                      sem.at[3, slot]),
+            ]
+        return copies
+
+    @pl.when(pi == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        # Warm-up: the first page has nothing to hide behind.
+        for c in page_copies(0, 0):
+            c.start()
+
+    slot = jax.lax.rem(pi, 2)
+
+    # Ping-pong: kick off page pi+1 into the *other* slot before
+    # blocking on page pi — this is the load/compute overlap.
+    @pl.when(pi + 1 < n_pages)
+    def _prefetch():
+        for c in page_copies(jax.lax.rem(pi + 1, 2), pi + 1):
+            c.start()
+
+    for c in page_copies(slot, pi):
+        c.wait()
+
+    length = len_ref[0, 0]
+    k_block_start = pi * page_size
+
+    @pl.when(k_block_start < length)
+    def _body():
+        if quantized:
+            k = _dequant_page(k_buf[slot], ks_buf[slot])
+            v = _dequant_page(v_buf[slot], vs_buf[slot])
+        else:
+            k = k_buf[slot].astype(jnp.float32)
+            v = v_buf[slot].astype(jnp.float32)
+        _paged_page_step(q_ref, k, v, m_ref, l_ref, acc_ref,
+                         k_block_start=k_block_start, length=length,
+                         gp=gp, page_size=page_size, scale=scale)
 
     @pl.when(pi == n_pages - 1)
     def _done():
@@ -211,6 +322,9 @@ def flash_paged_decode(
     *,
     length: jax.Array,
     scale: Optional[float] = None,
+    k_scale: Optional[jax.Array] = None,
+    v_scale: Optional[jax.Array] = None,
+    buffers: int = 2,
     interpret: bool = False,
 ) -> jax.Array:
     """Paged flash decode.  q: (B, Hq, D); k_pages/v_pages:
@@ -219,10 +333,18 @@ def flash_paged_decode(
     valid rows per slot.  Returns (B, Hq, D).
 
     The split-K grid walks the block table, not the pool: step ``i`` of
-    slot ``b`` streams pool page ``block_tables[b, i]`` (scalar-prefetch
-    index map), so KV is gathered page by page inside the loop.  Table
-    entries past a slot's allocation point at the null page and are
-    skipped by the length guard.  The q-head group must be sublane-
+    slot ``b`` streams pool page ``block_tables[b, i]``, so KV is
+    gathered page by page inside the loop.  ``buffers`` picks the
+    gather pipeline: 1 = BlockSpec index maps (the scalar-prefetched
+    table dereferenced per step), 2 = explicit two-slot DMA ping-pong
+    (page ``i+1``'s copy issued before page ``i``'s compute).  Both are
+    bit-identical — they share the arithmetic body.
+
+    int8 pools pass per-row scale rows ``k_scale``/``v_scale``
+    ((P, Hkv, page_size) f32); dequant is fused into the split-K loop,
+    so quantized pages cost half the f32 HBM traffic and no extra pass.
+    Table entries past a slot's allocation point at the null page and
+    are skipped by the length guard.  The q-head group must be sublane-
     padded by the caller (ops.py pads to >= 8 rows, as for the dense
     kernel).
     """
@@ -231,40 +353,79 @@ def flash_paged_decode(
     _, n_pages = block_tables.shape
     assert hq % hkv == 0
     group = hq // hkv
+    if buffers not in (1, 2):
+        raise ValueError(f"buffers must be 1 or 2, got {buffers}")
+    quantized = k_pages.dtype == jnp.int8
+    if quantized and (k_scale is None or v_scale is None):
+        raise ValueError("int8 k_pages/v_pages need k_scale and v_scale "
+                         "rows (P, Hkv, page_size)")
+    if not quantized and (k_scale is not None or v_scale is not None):
+        raise ValueError("k_scale/v_scale are only valid for int8 pools")
     if scale is None:
         scale = d ** -0.5
     len2d = length.reshape(b, 1).astype(jnp.int32)
     qg = q.reshape(b, hkv, group, d)
     grid = (b, hkv, n_pages)
 
-    kernel = functools.partial(_paged_decode_kernel, n_pages=n_pages,
-                               page_size=page_size, gp=group, scale=scale)
+    head_specs = [
+        pl.BlockSpec((1, 1), lambda bb, h, pi, bt: (bb, 0)),
+        pl.BlockSpec((1, 1, group, d), lambda bb, h, pi, bt: (bb, h, 0, 0)),
+    ]
+    state_scratch = [
+        pltpu.VMEM((group, _LANES), jnp.float32),
+        pltpu.VMEM((group, _LANES), jnp.float32),
+        pltpu.VMEM((group, d), jnp.float32),
+    ]
+    operands = [block_tables.astype(jnp.int32), len2d, qg, k_pages, v_pages]
+    if quantized:
+        operands += [k_scale.astype(jnp.float32), v_scale.astype(jnp.float32)]
+
+    if buffers == 1:
+        kernel = functools.partial(
+            _paged_decode_kernel, n_pages=n_pages, page_size=page_size,
+            gp=group, scale=scale, quantized=quantized)
+        page_spec = pl.BlockSpec((1, 1, page_size, d),
+                                 lambda bb, h, pi, bt: (bt[bb, pi], h, 0, 0))
+        in_specs = head_specs + [page_spec, page_spec]
+        if quantized:
+            srow_spec = pl.BlockSpec((1, 1, page_size),
+                                     lambda bb, h, pi, bt: (bt[bb, pi], h, 0))
+            in_specs += [srow_spec, srow_spec]
+        scratch = list(state_scratch)
+    else:
+        kernel = functools.partial(
+            _paged_decode_dbuf_kernel, n_pages=n_pages, page_size=page_size,
+            gp=group, scale=scale, quantized=quantized)
+        any_spec = pl.BlockSpec(memory_space=pltpu.ANY)
+        in_specs = head_specs + [any_spec, any_spec]
+        scratch = list(state_scratch) + [
+            pltpu.VMEM((2, page_size, d), k_pages.dtype),
+            pltpu.VMEM((2, page_size, d), v_pages.dtype),
+        ]
+        n_copies = 2
+        if quantized:
+            in_specs += [any_spec, any_spec]
+            scratch += [
+                pltpu.VMEM((2, page_size), jnp.float32),
+                pltpu.VMEM((2, page_size), jnp.float32),
+            ]
+            n_copies = 4
+        scratch.append(pltpu.SemaphoreType.DMA((n_copies, 2)))
+
     out = pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
             grid=grid,
-            in_specs=[
-                pl.BlockSpec((1, 1), lambda bb, h, pi, bt: (bb, 0)),
-                pl.BlockSpec((1, 1, group, d),
-                             lambda bb, h, pi, bt: (bb, h, 0, 0)),
-                pl.BlockSpec((1, 1, page_size, d),
-                             lambda bb, h, pi, bt: (bt[bb, pi], h, 0, 0)),
-                pl.BlockSpec((1, 1, page_size, d),
-                             lambda bb, h, pi, bt: (bt[bb, pi], h, 0, 0)),
-            ],
+            in_specs=in_specs,
             out_specs=pl.BlockSpec((1, 1, group, d),
                                    lambda bb, h, pi, bt: (bb, h, 0, 0)),
-            scratch_shapes=[
-                pltpu.VMEM((group, _LANES), jnp.float32),
-                pltpu.VMEM((group, _LANES), jnp.float32),
-                pltpu.VMEM((group, d), jnp.float32),
-            ],
+            scratch_shapes=scratch,
         ),
         out_shape=jax.ShapeDtypeStruct((b, hkv, group, d), q.dtype),
         compiler_params=_compat.CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
-        name="gama_flash_paged_decode",
-    )(block_tables.astype(jnp.int32), len2d, qg, k_pages, v_pages)
+        name=f"gama_flash_paged_decode_b{buffers}",
+    )(*operands)
     return out.reshape(b, hq, d)

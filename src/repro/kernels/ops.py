@@ -223,15 +223,23 @@ def decode(q: jax.Array, k: jax.Array, v: jax.Array, *,
 def decode_paged(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array, *,
                  block_tables: jax.Array, length: jax.Array,
                  scale: Optional[float] = None,
+                 k_scale: Optional[jax.Array] = None,
+                 v_scale: Optional[jax.Array] = None,
+                 buffers: int = 2,
                  mode: Mode = "auto") -> jax.Array:
     """Single-token decode attention over a **paged** KV cache
     (``repro.serving.kvpool``).  q: (B,Hq,D); k_pages/v_pages:
     (P,Hkv,page_size,D) pool arrays; block_tables: (B,max_pages) int32
     page ids; length: (B,) int32 per-slot valid rows.
 
-    The kernel path gathers each slot's pages via the scalar-prefetched
-    block table inside the split-K loop (one page per step, the last
-    partial page masked by ``length``); the ref path materializes the
+    The kernel path gathers each slot's pages via the block table
+    inside the split-K loop (one page per step, the last partial page
+    masked by ``length``); ``buffers=2`` (default) double-buffers that
+    gather with explicit DMA copy slots so page i+1's loads overlap
+    page i's softmax/matmul, and ``buffers=1`` keeps the serial
+    BlockSpec gather — both bit-identical.  int8 pools pass per-row
+    ``k_scale``/``v_scale`` rows ((P,Hkv,page_size) f32); dequant fuses
+    into the split-K loop.  The ref path dequantizes + materializes the
     gather and runs the dense decode oracle — mathematically identical.
     """
     _check_gqa(q.shape[1], k_pages.shape[1])
@@ -246,13 +254,22 @@ def decode_paged(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array, *,
         raise ValueError(
             f"paged decode length must be per-slot with shape ({b},), "
             f"got {length.shape}")
+    quantized = k_pages.dtype == jnp.int8
+    if quantized and (k_scale is None or v_scale is None):
+        raise ValueError(
+            "int8 k_pages/v_pages need per-row k_scale/v_scale rows "
+            "(P, Hkv, page_size) — decoding raw int8 codes as values "
+            "would be silently wrong")
+    if not quantized and (k_scale is not None or v_scale is not None):
+        raise ValueError("k_scale/v_scale are only valid for int8 pools")
     # Stale host bookkeeping must not read past the table's coverage.
     length = jnp.minimum(length, block_tables.shape[1] * page_size)
     block_tables = jnp.asarray(block_tables, jnp.int32)
     if not _use_kernel(mode):
         _obs_count("ops.decode_paged.ref")
         return ref.ref_paged_decode_attention(
-            q, k_pages, v_pages, block_tables, length=length, scale=scale)
+            q, k_pages, v_pages, block_tables, length=length, scale=scale,
+            k_scale=k_scale, v_scale=v_scale)
     _obs_count("ops.decode_paged.kernel")
     group = hq // hkv
     gp = max(8, group)                  # sublane-pad the GQA group
@@ -264,7 +281,8 @@ def decode_paged(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array, *,
         qq = q
     out = flash_paged_decode(qq, k_pages, v_pages, block_tables,
                              length=length, scale=scale,
-                             interpret=_interpret())
+                             k_scale=k_scale, v_scale=v_scale,
+                             buffers=buffers, interpret=_interpret())
     if gp != group:
         out = out.reshape(b, hkv, gp, d)[:, :, :group].reshape(b, hq, d)
     return out

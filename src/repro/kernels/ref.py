@@ -188,16 +188,32 @@ def gather_pages(pool: jax.Array, block_tables: jax.Array) -> jax.Array:
         b, hkv, n_pages * ps, d)
 
 
+def dequantize_pool(pages: jax.Array,
+                    page_scale: Optional[jax.Array]) -> jax.Array:
+    """Apply per-row scale rows to an int8 page pool: (P, Hkv, ps, D)
+    int8 x (P, Hkv, ps) f32 -> f32 values.  With ``page_scale=None`` the
+    pool is already full precision and passes through unchanged.  Same
+    math as serving.quant.dequantize_kv (kept here so the oracle stays
+    dependency-free)."""
+    if page_scale is None:
+        return pages
+    return pages.astype(jnp.float32) * page_scale[..., None]
+
+
 def ref_paged_decode_attention(q: jax.Array, k_pages: jax.Array,
                                v_pages: jax.Array,
                                block_tables: jax.Array, *,
                                length: jax.Array,
-                               scale: Optional[float] = None) -> jax.Array:
-    """Oracle for flash_paged_decode: gather pages contiguous, then the
-    dense decode oracle.  Unallocated table entries point at the null
-    sink page; ``length`` masks them (and the partial tail page) out."""
-    kc = gather_pages(k_pages, block_tables)
-    vc = gather_pages(v_pages, block_tables)
+                               scale: Optional[float] = None,
+                               k_scale: Optional[jax.Array] = None,
+                               v_scale: Optional[jax.Array] = None
+                               ) -> jax.Array:
+    """Oracle for flash_paged_decode: dequantize the pools (int8 pages
+    carry per-row scale rows), gather pages contiguous, then the dense
+    decode oracle.  Unallocated table entries point at the null sink
+    page; ``length`` masks them (and the partial tail page) out."""
+    kc = gather_pages(dequantize_pool(k_pages, k_scale), block_tables)
+    vc = gather_pages(dequantize_pool(v_pages, v_scale), block_tables)
     return ref_decode_attention(q, kc, vc, length=length, scale=scale)
 
 

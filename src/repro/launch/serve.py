@@ -19,7 +19,10 @@ through a one-slot one-shot *dense* ``generate()`` and checks the
 continuous outputs are identical (for ``--kv paged`` this is the
 paged-vs-dense bit-identity check).  ``--kv paged`` serves through the
 ``repro.serving.kvpool`` page pool (``--page_size``/``--pool_pages``)
-and logs page-reclaim/preemption events plus the pool high-water mark.
+and logs page-reclaim/preemption events plus the pool high-water mark;
+``--kv-dtype int8`` stores the pages quantized (per-row scales,
+dequantized inside the fused decode kernel) at roughly a third of the
+f32 KV bytes.
 ``--mesh D,M`` installs a pack mesh so the large GEMMs run as
 pack-level collective matmuls (simulate devices with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8``).
@@ -202,6 +205,12 @@ def main() -> None:
                          "the kvpool page pool + block tables")
     ap.add_argument("--page_size", type=int, default=0,
                     help="paged: tokens per page (0 = tuner/analytic)")
+    ap.add_argument("--kv-dtype", dest="kv_dtype", type=str, default=None,
+                    choices=("bfloat16", "float32", "int8"),
+                    help="paged: page-pool storage dtype (default keeps "
+                         "the model's cache dtype; int8 stores quantized "
+                         "pages with per-row scales, dequantized inside "
+                         "the decode kernel)")
     ap.add_argument("--pool_pages", type=int, default=0,
                     help="paged: pool capacity in pages (0 = the "
                          "dense-equivalent slots * ceil(max_len/page))")
@@ -258,6 +267,7 @@ def main() -> None:
         temperature=args.temperature, seed=args.seed,
         quantize=args.quantize, eos_id=args.eos_id,
         kv=args.kv, page_size=args.page_size, pool_pages=args.pool_pages,
+        kv_dtype=args.kv_dtype,
         pack_mesh=mesh, pack_min_flops=args.pack_min_flops))
     try:
         rep = run_trace(engine, trace)
@@ -281,6 +291,7 @@ def main() -> None:
               f"(backend={jax.default_backend()})")
         if engine.kv_mode == "paged":
             print(f"[serve] paged kv: page_size={engine.pool.page_size} "
+                  f"kv_dtype={engine.scfg.kv_dtype or 'cache'} "
                   f"pool={engine.pool.num_pages} pages "
                   f"pages_hwm={rep['pages_hwm']} "
                   f"pages_reclaimed={rep['pages_reclaimed']} "
@@ -318,15 +329,26 @@ def main() -> None:
 
 
 def _verify(cfg, params, trace, results, scfg) -> None:
-    """Re-run every request one-shot (one slot, *dense* KV, same
-    kernels/pack context) and compare with the continuous-batching
-    outputs — for a paged run this is exactly the paged-vs-dense
-    bit-identity check."""
+    """Re-run every request one-shot (one slot, same kernels/pack
+    context) and compare with the continuous-batching outputs.  For a
+    full-precision paged run the one-shot engine is *dense*, so this
+    is exactly the paged-vs-dense bit-identity check.  With a
+    quantized ``kv_dtype`` the one-shot reference keeps the same paged
+    quantized layout (dense has no page pool to retype and would add
+    quantization noise to the diff): the check then isolates the
+    continuous-batching machinery — admission, paging, batched decode
+    — which must be bit-identical run to run; the quantization *error*
+    itself is bounded separately (tests/test_quant.py)."""
     import dataclasses
 
     from repro.serving.engine import ServeConfig, ServeEngine
-    one = ServeEngine(cfg, params, dataclasses.replace(
-        scfg, batch_slots=1, kv="dense"))
+    if scfg.kv_dtype is None:
+        one_scfg = dataclasses.replace(scfg, batch_slots=1, kv="dense")
+        ref_name = "one-shot dense generate()"
+    else:
+        one_scfg = dataclasses.replace(scfg, batch_slots=1)
+        ref_name = f"one-shot paged/{scfg.kv_dtype} generate()"
+    one = ServeEngine(cfg, params, one_scfg)
     try:
         bad = []
         for t in trace:
@@ -337,7 +359,7 @@ def _verify(cfg, params, trace, results, scfg) -> None:
         if bad:
             raise SystemExit(f"[serve] VERIFY FAILED for ids {bad}")
         print(f"[serve] verify OK: {len(trace)} requests bit-identical "
-              f"to one-shot generate()")
+              f"to {ref_name}")
     finally:
         one.close()
 

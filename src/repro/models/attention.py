@@ -45,17 +45,31 @@ def init_kv_cache(batch: int, n_kv_heads: int, max_len: int, d_head: int,
 
 
 def init_paged_kv_cache(num_pages: int, n_kv_heads: int, page_size: int,
-                        d_head: int, dtype=jnp.bfloat16) -> Params:
+                        d_head: int, dtype=jnp.bfloat16,
+                        kv_dtype: Optional[str] = None) -> Params:
     """Paged pool layout (``repro.serving.kvpool``): ``num_pages`` blocks
     of ``page_size`` tokens shared by every slot, addressed through a
     per-slot block table.  ``num_pages`` must already include the null
-    sink page (the engine allocates pool + 1)."""
-    return {
+    sink page (the engine allocates pool + 1).
+
+    ``kv_dtype`` overrides the page dtype (``ServeConfig.kv_dtype``):
+    a float name just retypes the pools; ``"int8"`` adds per-row f32
+    scale-row arrays (``k_scale``/``v_scale``, one symmetric scale per
+    token row per KV head) — the quantized-page layout the fused-dequant
+    decode kernel consumes."""
+    page_dtype = jnp.dtype(kv_dtype) if kv_dtype else jnp.dtype(dtype)
+    cache = {
         "k_pages": jnp.zeros((num_pages, n_kv_heads, page_size, d_head),
-                             dtype),
+                             page_dtype),
         "v_pages": jnp.zeros((num_pages, n_kv_heads, page_size, d_head),
-                             dtype),
+                             page_dtype),
     }
+    if page_dtype == jnp.int8:
+        cache["k_scale"] = jnp.zeros((num_pages, n_kv_heads, page_size),
+                                     jnp.float32)
+        cache["v_scale"] = jnp.zeros((num_pages, n_kv_heads, page_size),
+                                     jnp.float32)
+    return cache
 
 
 def attention(
@@ -144,16 +158,35 @@ def attention(
         pos = jnp.asarray(cache_pos, jnp.int32)
         page_ids = block_tables[jnp.arange(b), pos // page_size]
         rows = pos % page_size
-        ck = cache["k_pages"].at[page_ids, :, rows, :].set(
-            k[:, :, 0].astype(cache["k_pages"].dtype))
-        cv = cache["v_pages"].at[page_ids, :, rows, :].set(
-            v[:, :, 0].astype(cache["v_pages"].dtype))
-        new_cache = {"k_pages": ck, "v_pages": cv}
         length = pos + 1
-        out = kops.decode_paged(q[:, :, 0], ck.astype(x.dtype),
-                                cv.astype(x.dtype),
-                                block_tables=block_tables, length=length,
-                                mode=attn_mode)
+        if "k_scale" in cache:
+            # int8 pages: quantize exactly the row being appended (per-
+            # row symmetric scales — no existing row is requantized) and
+            # write its scale into the pool's scale rows.  The decode
+            # kernel dequantizes inside its split-K page loop.
+            from repro.serving.quant import quantize_kv_row
+            kq, ksc = quantize_kv_row(k[:, :, 0])
+            vq, vsc = quantize_kv_row(v[:, :, 0])
+            ck = cache["k_pages"].at[page_ids, :, rows, :].set(kq)
+            cv = cache["v_pages"].at[page_ids, :, rows, :].set(vq)
+            cks = cache["k_scale"].at[page_ids, :, rows].set(ksc)
+            cvs = cache["v_scale"].at[page_ids, :, rows].set(vsc)
+            new_cache = {"k_pages": ck, "v_pages": cv,
+                         "k_scale": cks, "v_scale": cvs}
+            out = kops.decode_paged(q[:, :, 0], ck, cv,
+                                    block_tables=block_tables,
+                                    length=length, k_scale=cks,
+                                    v_scale=cvs, mode=attn_mode)
+        else:
+            ck = cache["k_pages"].at[page_ids, :, rows, :].set(
+                k[:, :, 0].astype(cache["k_pages"].dtype))
+            cv = cache["v_pages"].at[page_ids, :, rows, :].set(
+                v[:, :, 0].astype(cache["v_pages"].dtype))
+            new_cache = {"k_pages": ck, "v_pages": cv}
+            out = kops.decode_paged(q[:, :, 0], ck.astype(x.dtype),
+                                    cv.astype(x.dtype),
+                                    block_tables=block_tables,
+                                    length=length, mode=attn_mode)
         out = out[:, :, None].transpose(0, 2, 1, 3)   # (B, 1, H, D)
         out = out.reshape(b, s, n_heads * d_head)
         out = L.shard_hint(out, "channels")

@@ -173,16 +173,19 @@ def paged_eligible(cfg: ModelConfig) -> bool:
             and all(spec.mixer == "attn" for spec in cfg.pattern))
 
 
-def init_paged_cache(cfg: ModelConfig, num_pages: int,
-                     page_size: int) -> List:
+def init_paged_cache(cfg: ModelConfig, num_pages: int, page_size: int,
+                     kv_dtype: Optional[str] = None) -> List:
     """Paged-KV cache stack (``repro.serving.kvpool``): per attention
     layer, a (num_pages + 1, Hkv, page_size, D) page pool — the extra
-    row is the null sink unallocated block-table entries point at."""
+    row is the null sink unallocated block-table entries point at.
+    ``kv_dtype`` overrides the page dtype (``"int8"`` adds per-row
+    scale-row arrays; see ``attention.init_paged_kv_cache``)."""
     if not paged_eligible(cfg):
         raise ValueError(
             f"arch {cfg.name!r} has non-attention state (or an enc-dec "
             f"cross cache) — the paged KV pool covers attention KV only")
-    return T.init_stack_cache(cfg, 0, 0, paged=(num_pages + 1, page_size))
+    return T.init_stack_cache(cfg, 0, 0,
+                              paged=(num_pages + 1, page_size, kv_dtype))
 
 
 def prefill(params: Params, batch: Batch, cfg: ModelConfig,

@@ -81,12 +81,15 @@ def init_block(rng, cfg: ModelConfig, spec: BlockSpec,
 
 def init_block_cache(cfg: ModelConfig, spec: BlockSpec, batch: int,
                      max_len: int, cross_len: int = 0,
-                     paged: Optional[Tuple[int, int]] = None) -> Cache:
-    """``paged=(num_pages, page_size)`` swaps the attention KV layout
-    for the kvpool page-pool arrays (decode addresses them through a
-    block table; ``batch``/``max_len`` are then ignored for attention).
-    Recurrent state (mamba/rwkv) is fixed-size per slot and has no
-    paged form; enc-dec cross caches are likewise dense-only."""
+                     paged: Optional[Tuple] = None) -> Cache:
+    """``paged=(num_pages, page_size[, kv_dtype])`` swaps the attention
+    KV layout for the kvpool page-pool arrays (decode addresses them
+    through a block table; ``batch``/``max_len`` are then ignored for
+    attention).  The optional ``kv_dtype`` element overrides the page
+    dtype — ``"int8"`` adds per-row scale rows (see
+    ``attention.init_paged_kv_cache``).  Recurrent state (mamba/rwkv)
+    is fixed-size per slot and has no paged form; enc-dec cross caches
+    are likewise dense-only."""
     c: Cache = {}
     if spec.mixer == "attn":
         if paged is not None:
@@ -95,7 +98,8 @@ def init_block_cache(cfg: ModelConfig, spec: BlockSpec, batch: int,
                     "paged KV does not cover enc-dec cross caches")
             c["attn"] = A.init_paged_kv_cache(
                 paged[0], cfg.n_kv_heads, paged[1], cfg.d_head,
-                jnp.dtype(cfg.cache_dtype))
+                jnp.dtype(cfg.cache_dtype),
+                kv_dtype=paged[2] if len(paged) > 2 else None)
         else:
             c["attn"] = A.init_kv_cache(batch, cfg.n_kv_heads, max_len,
                                         cfg.d_head,
@@ -212,7 +216,7 @@ def init_stack(rng, cfg: ModelConfig, cross_attn: bool = False
 
 def init_stack_cache(cfg: ModelConfig, batch: int, max_len: int,
                      cross_len: int = 0,
-                     paged: Optional[Tuple[int, int]] = None) -> List[Cache]:
+                     paged: Optional[Tuple] = None) -> List[Cache]:
     caches = []
     for spec in cfg.pattern:
         one = init_block_cache(cfg, spec, batch, max_len, cross_len,

@@ -62,9 +62,16 @@ class ServeConfig:
     # mixers or an enc-dec cross cache bypass to dense transparently
     # (engine.kv_mode says which path is live).
     kv: str = "dense"         # "dense" | "paged"
-    page_size: int = 0        # tokens per page; 0 = tuner (schema v5)
+    page_size: int = 0        # tokens per page; 0 = tuner (schema v6)
     pool_pages: int = 0       # pool capacity; 0 = slots * ceil(max_len/ps)
                               # (the dense-equivalent footprint)
+    # Page precision: None keeps cfg.cache_dtype; a float name retypes
+    # the pools; "int8" stores quantized pages with per-row scale rows
+    # (serving.quant) — half the KV bytes, dequant fused into the
+    # decode kernel's split-K loop.  Paged-only: explicitly requesting
+    # a kv_dtype on an arch that bypasses to dense is an error (the
+    # engine must not silently store full-precision pages).
+    kv_dtype: Optional[str] = None
     # Pack-level sharding (repro.distributed.pack_gemm): when a mesh is
     # given, GEMMs above pack_min_flops — the lm head and the ffn
     # projections — run as pack/array collective matmuls over its model
@@ -151,6 +158,26 @@ class ServeEngine:
         if scfg.kv not in ("dense", "paged"):
             raise ValueError(f"ServeConfig.kv must be 'dense' or "
                              f"'paged', got {scfg.kv!r}")
+        if scfg.kv_dtype is not None:
+            from repro.serving.quant import KV_PAGE_DTYPES
+            if scfg.kv_dtype not in KV_PAGE_DTYPES:
+                raise ValueError(
+                    f"ServeConfig.kv_dtype must be one of "
+                    f"{KV_PAGE_DTYPES}, got {scfg.kv_dtype!r}")
+            if scfg.kv != "paged":
+                raise ValueError(
+                    f"ServeConfig.kv_dtype={scfg.kv_dtype!r} requires "
+                    f"kv='paged' — the dense layout has no page pool to "
+                    f"retype (got kv={scfg.kv!r})")
+            if not paged_eligible(cfg):
+                raise ValueError(
+                    f"arch {cfg.name!r} cannot honor "
+                    f"kv_dtype={scfg.kv_dtype!r}: its recurrent state / "
+                    f"enc-dec cross cache bypasses the page pool to the "
+                    f"dense layout, which would silently store "
+                    f"full-precision KV.  Drop kv_dtype (the bypass is "
+                    f"only transparent for the default page precision) "
+                    f"or serve an attention-only arch")
         if scfg.batch_slots == 0:
             # Tuned slot count (schema v5 `serve` op): measured best for
             # this arch/workload when the cache has one, else the
@@ -329,7 +356,8 @@ class ServeEngine:
     def new_cache(self):
         if self.kv_mode == "paged":
             return init_paged_cache(self.cfg, self.pool.num_pages,
-                                    self.pool.page_size)
+                                    self.pool.page_size,
+                                    kv_dtype=self.scfg.kv_dtype)
         return init_cache(self.cfg, self.scfg.batch_slots,
                           self.scfg.max_len, enc_len=self.scfg.enc_len)
 
@@ -337,12 +365,20 @@ class ServeEngine:
 
     def token_kv_bytes(self) -> int:
         """Bytes of attention KV one token occupies across the stack
-        (k + v, every attention layer)."""
+        (k + v, every attention layer).  Paged pools with a kv_dtype
+        override are counted at the page dtype; int8 pages additionally
+        carry one f32 scale per token row per KV head (the per-row
+        scale-row layout), so the int8 figure is D + 4 bytes per head
+        row, not D — roughly half of f32's 4*D for D >= 8."""
         cfg = self.cfg
         n_attn = sum(1 for spec in cfg.pattern if spec.mixer == "attn")
-        itemsize = jnp.dtype(cfg.cache_dtype).itemsize
-        return (2 * n_attn * cfg.n_groups * cfg.n_kv_heads * cfg.d_head
-                * itemsize)
+        kv_dtype = (self.scfg.kv_dtype if self.kv_mode == "paged"
+                    else None)
+        itemsize = jnp.dtype(kv_dtype or cfg.cache_dtype).itemsize
+        row_bytes = cfg.d_head * itemsize
+        if kv_dtype == "int8":
+            row_bytes += 4                       # the row's f32 scale
+        return 2 * n_attn * cfg.n_groups * cfg.n_kv_heads * row_bytes
 
     def kv_bytes_reserved(self) -> int:
         """Attention-KV bytes held for the engine's lifetime: the page
@@ -386,15 +422,37 @@ class ServeEngine:
         the page pools along the slot's block-table row.  Every chunk of
         the (page-aligned) dense scratch is written — chunks past the
         slot's allocation land on the null sink page (bt_row points them
-        there), so one compiled program covers every prompt length."""
+        there), so one compiled program covers every prompt length.
+        int8 pools quantize each token row on the way in and scatter
+        its scale into the pool's scale rows."""
         mp, ps = self._max_pages, self.pool.page_size
 
-        def scat(pool, dense):
-            # pool: (G, P+1, Hkv, ps, D); dense: (G, 1, Hkv, mp*ps, D)
+        def chunk(dense):
+            # dense: (G, 1, Hkv, mp*ps, D) -> (G, mp, Hkv, ps, D)
             g, _, hkv, _, d = dense.shape
-            chunks = dense[:, 0].reshape(g, hkv, mp, ps, d) \
-                .transpose(0, 2, 1, 3, 4)              # (G, mp, Hkv, ps, D)
-            return pool.at[:, bt_row].set(chunks.astype(pool.dtype))
+            return dense[:, 0].reshape(g, hkv, mp, ps, d) \
+                .transpose(0, 2, 1, 3, 4)
+
+        def scat(pool, dense):
+            return pool.at[:, bt_row].set(chunk(dense).astype(pool.dtype))
+
+        if self.scfg.kv_dtype == "int8":
+            from repro.serving.quant import quantize_kv_row
+
+            def scat_q(pool, spool, dense):
+                qrows, srows = quantize_kv_row(chunk(dense))
+                return (pool.at[:, bt_row].set(qrows),
+                        spool.at[:, bt_row].set(srows))
+
+            out = []
+            for fc, oc in zip(full, one):
+                kq, ks = scat_q(fc["attn"]["k_pages"],
+                                fc["attn"]["k_scale"], oc["attn"]["k"])
+                vq, vs = scat_q(fc["attn"]["v_pages"],
+                                fc["attn"]["v_scale"], oc["attn"]["v"])
+                out.append({"attn": {"k_pages": kq, "v_pages": vq,
+                                     "k_scale": ks, "v_scale": vs}})
+            return out
 
         return [{"attn": {
             "k_pages": scat(fc["attn"]["k_pages"], oc["attn"]["k"]),
@@ -555,7 +613,15 @@ class ServeEngine:
 
     def _admit(self, events: Dict[str, Any]) -> None:
         """Admission pass: free slots AND (paged) enough free pages for
-        each prompt, reserved cumulatively in FIFO order."""
+        each prompt, reserved cumulatively in FIFO order.
+
+        The pass is a two-phase pipeline: phase one *dispatches* every
+        admission's prefill and (paged) pool scatter without a host
+        sync, phase two reads the first tokens back.  JAX async
+        dispatch then overlaps admission i's pool scatter with
+        admission i+1's prefill attention — the engine-level analogue
+        of the kernel's ping-pong page gather (nothing blocks between
+        one chunk's scatter and the next chunk's compute)."""
         fits = None
         if self.kv_mode == "paged":
             budget = self.pool.free_pages
@@ -573,6 +639,7 @@ class ServeEngine:
                 state["reserved"] += need
                 return True
         tr = self._obs.tracer
+        inflight = []
         for req in self.sched.pop_admissible(self.step_count, fits=fits):
             slot = self.sched.admit(req)
             tr.async_end("queued", req.rid)
@@ -581,9 +648,14 @@ class ServeEngine:
                 pages = self.blocks.assign(slot.index, req.prompt_len)
                 assert pages is not None, "admission fits() reserved these"
             self._slot_req[slot.index] = req
-            tok0 = self._prefill_slot(slot, req)
+            inflight.append((slot, req, self._prefill_slot(slot, req)))
             self.stats["admitted"] += 1
             events["admitted"].append(req.rid)
+        for slot, req, tok0_dev in inflight:
+            # First host sync of the pass: every later admission's
+            # prefill + scatter is already in the device queue.
+            tok0 = int(np.asarray(tok0_dev))
+            self._tok[slot.index] = tok0
             self._emit(slot, tok0, events)
         self._note_kv_tokens(
             sum(s.length for s in self.sched.active_slots()))
@@ -671,13 +743,16 @@ class ServeEngine:
             tr.async_end("decode", rid)
             tr.async_end("request", rid, tokens=slot.generated, eos=eos)
 
-    def _prefill_slot(self, slot: Slot, req: Request) -> int:
-        """Prefill one admission into its slot: pad the prompt to its
-        bucket, run it against a *fresh* single-slot cache (zero
-        recurrent state, zero KV — no leakage from the previous
-        occupant), insert the result at the slot index, and return the
-        first generated token (greedy from the prompt's last-position
-        logits, exactly the legacy generate() seed token)."""
+    def _prefill_slot(self, slot: Slot, req: Request) -> jax.Array:
+        """Dispatch one admission's prefill into its slot: pad the
+        prompt to its bucket, run it against a *fresh* single-slot
+        cache (zero recurrent state, zero KV — no leakage from the
+        previous occupant), insert the result at the slot index, and
+        return the first generated token (greedy from the prompt's
+        last-position logits, exactly the legacy generate() seed token)
+        as an *unsynced device value* — the caller reads it back after
+        dispatching every admission in the pass, so this prefill's pool
+        scatter overlaps the next admission's attention."""
         plen = req.prompt_len
         bucket = (plen if self._exact_prefill
                   else _bucket_for(plen, self.scfg.max_len))
@@ -695,7 +770,8 @@ class ServeEngine:
                 # Scatter the dense scratch into the pool along this
                 # slot's block-table row (prompt pages; the tail lands
                 # on the null sink) — prefill *inserts pages*, decode
-                # appends rows.
+                # appends rows.  Dispatched, not synced: it pipelines
+                # behind whatever the caller launches next.
                 self.caches = self._insert(
                     self.caches, one,
                     jnp.asarray(self.blocks.table[slot.index]))
@@ -704,9 +780,7 @@ class ServeEngine:
                     self.caches, one, jnp.asarray(slot.index, jnp.int32))
             self.stats["prefills"] += 1
             slot.length = plen
-            tok0 = int(np.asarray(jnp.argmax(logits[0, plen - 1])))
-            self._tok[slot.index] = tok0
-        return tok0
+            return jnp.argmax(logits[0, plen - 1])
 
     # -- legacy one-shot API (reimplemented on the continuous loop) ---------
 

@@ -92,3 +92,45 @@ def maybe_dequant(w: Any, dtype) -> jax.Array:
     if isinstance(w, dict) and "q" in w and "scale" in w:
         return dequantize_weight(w, dtype)
     return w.astype(dtype)
+
+
+# -- int8 KV pages (kvpool kv_dtype="int8") ---------------------------------
+#
+# Page layout: alongside each int8 pool array (P, Hkv, page_size, D) lives
+# an f32 *scale-row* array (P, Hkv, page_size) — one symmetric scale per
+# token row per KV head.  Per-row scales are what make the layout
+# append-friendly: decode quantizes exactly the one row it writes, and no
+# existing row is ever requantized.  Dequant (q * scale) fuses into the
+# split-K page loop of flash_paged_decode, so int8 pages stream at half
+# the f32 bandwidth with no separate dequant pass.
+
+KV_PAGE_DTYPES = ("int8", "bfloat16", "float32")
+
+
+def quantize_kv_row(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-row int8 quantization over the last (d_head) axis.
+
+    (..., D) -> (q int8 (..., D), scale f32 (...,)).  A zero row gets
+    scale 0 and dequantizes to exact zeros.  Rows whose max-|x| element
+    is exactly representable (e.g. integer values with max 127) round-
+    trip bit-exactly: scale divides every element.
+    """
+    xf = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xf), axis=-1) / 127.0
+    safe = jnp.where(scale > 0, scale, 1.0)
+    q = jnp.clip(jnp.round(xf / safe[..., None]), -127, 127
+                 ).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_kv(q: jax.Array, scale: jax.Array) -> jax.Array:
+    """Inverse of :func:`quantize_kv_row`: (..., D) int8 + (...,) f32
+    scales -> f32 values.  This is the reference dequant the fused
+    kernel epilogue must match (ref.py applies it pool-wide)."""
+    return q.astype(jnp.float32) * scale[..., None]
+
+
+def quantize_kv_pages(pages: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Quantize a whole pool: (P, Hkv, page_size, D) f32/bf16 ->
+    (int8 pages, f32 scale rows (P, Hkv, page_size))."""
+    return quantize_kv_row(pages)

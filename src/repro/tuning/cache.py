@@ -34,6 +34,13 @@ Schema history (see docs/TUNING.md for the full notes):
   per-slot max_len layout), measured through the same staggered trace
   with the candidate's KV layout live.  v4 files are discarded
   wholesale on load.
+* **v6** — ``serve`` configs gain ``kv_dtype``: the page pool's storage
+  dtype ("" = the model's cache dtype, "int8" = quantized pages with
+  per-row scale rows, fused-dequant decode).  Paged layouts only.  v5
+  files — including their still-valid-looking serve entries — are
+  discarded wholesale on load, per the invalidation policy above: a v5
+  serve entry's timing was measured without the kv_dtype axis and must
+  not silently win against candidates it never competed with.
 """
 
 from __future__ import annotations
@@ -44,7 +51,7 @@ import tempfile
 from pathlib import Path
 from typing import Any, Dict, Optional
 
-SCHEMA_VERSION = 5
+SCHEMA_VERSION = 6
 
 _ENV_VAR = "REPRO_TUNING_CACHE"
 

@@ -214,8 +214,9 @@ def _serve_key(cfg, max_len: int, dt: str, backend: str, kind: str) -> str:
 
 def serve_config(cfg, max_len: int, dtype) -> ServeCandidate:
     """Best-known continuous-batching engine tunables for this
-    arch/workload (schema v5: slot count + paged-KV page size), falling
-    back to the analytic prior (8 slots / 32-token pages)."""
+    arch/workload (schema v6: slot count + paged-KV page size + page
+    kv_dtype), falling back to the analytic prior (8 slots / 32-token
+    pages, full-precision)."""
     dt = canonical_dtype(dtype)
     backend, kind = backend_fingerprint()
     key = _serve_key(cfg, max_len, dt, backend, kind)
@@ -244,6 +245,19 @@ def serve_page_size(cfg, max_len: int, dtype) -> int:
     chose the paged layout, it only asks for the granularity."""
     tuned = serve_config(cfg, max_len, dtype).page_size
     return tuned if tuned > 0 else prior.analytic_serve(max_len).page_size
+
+
+def serve_kv_dtype(cfg, max_len: int, dtype) -> Optional[str]:
+    """Best-known paged-KV page dtype for a ``kv="paged"`` engine
+    (``ServeConfig.kv_dtype = None`` keeps the cache dtype).  Returns
+    None unless a *measured* tuned entry chose a quantized layout — a
+    cache miss never silently changes numerics — and never for archs
+    the page pool cannot cover (their pages fall back to dense)."""
+    from repro.models.model import paged_eligible
+    if not paged_eligible(cfg):
+        return None
+    tuned = serve_config(cfg, max_len, dtype).kv_dtype
+    return tuned or None
 
 
 def warm_gemm_shapes(shapes: Sequence[Tuple[int, int, int]], dtype) -> int:
@@ -468,14 +482,17 @@ def tune_serve(cfg, *, max_len: int = 64, prompt_len: int = 8,
                stagger: int = 2, keep: int = 3, warmup: int = 0,
                reps: int = 1, force: bool = False,
                cache: Optional[TuningCache] = None) -> TuneResult:
-    """Tune the continuous-batching engine (schema v5 ``serve`` op:
-    slot count x paged-KV page size) for one model config: each
-    surviving candidate runs a full staggered-arrival trace through
-    ``ServeEngine`` — with the candidate's KV layout live — and is
-    scored on measured us-per-token (i.e. tokens/s), with completeness
-    as the numerics gate.  ``cfg`` is a ``ModelConfig`` (use the smoke
-    config of an arch — the tunable transfers by keying on arch +
-    max_len)."""
+    """Tune the continuous-batching engine (schema v6 ``serve`` op:
+    slot count x paged-KV page size x page kv_dtype) for one model
+    config: each surviving candidate runs a full staggered-arrival
+    trace through ``ServeEngine`` — with the candidate's KV layout
+    live — and is scored on measured us-per-token (i.e. tokens/s),
+    with completeness as the numerics gate.  Quantized-page candidates
+    are dropped up front for archs the page pool cannot cover (the
+    engine would reject them — see ``ServeConfig.kv_dtype``).  ``cfg``
+    is a ``ModelConfig`` (use the smoke config of an arch — the
+    tunable transfers by keying on arch + max_len)."""
+    from repro.models.model import paged_eligible
     from repro.tuning import runner
     dt = canonical_dtype(cfg.cdtype)
     backend, kind = backend_fingerprint()
@@ -485,6 +502,8 @@ def tune_serve(cfg, *, max_len: int = 64, prompt_len: int = 8,
     if hit is not None:
         return hit
     space = DesignSpace.serve(max_len=max_len)
+    if not paged_eligible(cfg):
+        space = [c for c in space if not c.kv_dtype]
     survivors = prior.prune_serve(space, max_len, keep=keep)
     return _measure_and_store(
         key, tc, survivors,

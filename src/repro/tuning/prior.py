@@ -244,13 +244,21 @@ def serve_score(c: ServeCandidate, max_len: int) -> Tuple:
     ~half-occupied last pages instead of a full ``max_len`` row, so
     smaller (nonzero) pages rank above larger ones and every paged
     layout ranks above dense — the paper's buffer discipline as a
-    prior, which ``time_serve`` then checks empirically.  Tiebreak:
-    fewer slots."""
+    prior, which ``time_serve`` then checks empirically.  int8 pages
+    store each bound row at a fraction of the full-precision bytes
+    (d_head int8 elements + one f32 scale vs d_head cache-dtype
+    elements), so the same dead rows cost proportionally less — the
+    waste term shrinks by that byte ratio and int8 ranks above "" at
+    equal geometry.  Tiebreak: fewer slots."""
     thpt = c.slots / (SERVE_STEP_OVERHEAD + c.slots)
     # Expected bound-but-dead KV rows per live request: half the last
     # page (paged) vs the whole unreached tail (dense, ~max_len/2 for a
-    # uniform length mix).
+    # uniform length mix).  Scaled by relative row bytes for quantized
+    # pages (int8 row = d_head + 4 scale bytes vs 4 * d_head f32 bytes
+    # at the repo's d_head >= 16: conservatively 1/2).
     waste = (c.page_size / 2) if c.page_size else (max_len / 2)
+    if c.kv_dtype == "int8":
+        waste /= 2
     return (round(thpt * 1e6), -waste, -c.slots)
 
 
@@ -266,5 +274,7 @@ def analytic_serve(max_len: int) -> ServeCandidate:
     (``ServeConfig.batch_slots = 8``) with the default paged-KV page
     granularity (32 tokens — the middle of the 16..64 window; only
     consulted when the engine runs ``kv="paged"``, so untuned *dense*
-    behavior is unchanged)."""
+    behavior is unchanged).  ``kv_dtype`` stays "" — quantized pages
+    change numerics and must be opted into (CLI / tuner measurement),
+    never silently enabled by a cache miss."""
     return ServeCandidate(slots=8, page_size=32)

@@ -261,11 +261,15 @@ def time_serve(cand: ServeCandidate, cfg, max_len: Optional[int] = None,
     # The candidate's KV layout runs live: page_size > 0 builds the
     # paged engine (kvpool page pool + block tables; archs it cannot
     # cover transparently fall back to dense inside the engine),
-    # page_size == 0 the dense per-slot layout.
+    # page_size == 0 the dense per-slot layout.  A nonempty kv_dtype
+    # (schema v6, e.g. "int8") retypes the page pool — the engine
+    # raises for archs that cannot honor it, which _measure_and_store
+    # records as a failed trial rather than aborting the tune.
     engine = ServeEngine(cfg, params, ServeConfig(
         batch_slots=cand.slots, max_len=max_len, pretune=False,
         kv="paged" if cand.page_size > 0 else "dense",
-        page_size=cand.page_size))
+        page_size=cand.page_size,
+        kv_dtype=cand.kv_dtype or None))
     rng = np.random.default_rng(0)
     prompts = rng.integers(0, cfg.vocab_size,
                            size=(n_req, prompt_len)).astype(np.int32)

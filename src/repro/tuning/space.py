@@ -106,14 +106,17 @@ class WkvCandidate:
 
 @dataclasses.dataclass(frozen=True)
 class ServeCandidate:
-    """Continuous-batching engine tunables (schema v5): ``slots`` is
+    """Continuous-batching engine tunables (schema v6): ``slots`` is
     how many requests decode per batched step; ``page_size`` is the
     paged-KV pool's tokens-per-page granularity (0 = dense per-slot
-    max_len reservation — the pre-kvpool layout).  Schema v4 lacked
-    ``page_size``."""
+    max_len reservation — the pre-kvpool layout); ``kv_dtype`` is the
+    page-pool storage dtype ("" keeps the model's cache dtype, "int8"
+    stores quantized pages with per-row scale rows — paged only).
+    Schema v5 lacked ``kv_dtype``; v4 lacked ``page_size``."""
 
     slots: int
     page_size: int = 0
+    kv_dtype: str = ""
 
     def to_json(self) -> dict:
         return dataclasses.asdict(self)
@@ -121,7 +124,8 @@ class ServeCandidate:
     @classmethod
     def from_json(cls, d: dict) -> "ServeCandidate":
         return cls(slots=int(d["slots"]),
-                   page_size=int(d.get("page_size", 0)))
+                   page_size=int(d.get("page_size", 0)),
+                   kv_dtype=str(d.get("kv_dtype", "")))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -256,6 +260,7 @@ class DesignSpace:
 
     SERVE_SLOTS: Sequence[int] = (1, 2, 4, 8, 16, 32)
     SERVE_PAGE_SIZES: Sequence[int] = (0, 16, 32, 64)   # 0 = dense KV
+    SERVE_KV_DTYPES: Sequence[str] = ("", "int8")       # "" = cache dtype
 
     @classmethod
     def serve(cls, max_slots: int = 32,
@@ -263,22 +268,29 @@ class DesignSpace:
         """Slot counts (powers of two up to ``max_slots``) crossed with
         the paged-KV page size (0 keeps the dense layout; pages larger
         than the workload's max_len would hold a single partial page
-        and are excluded when ``max_len`` is given).  Always includes
-        the engine's untuned default (8 slots, dense) so tuning can
-        never regress below the fallback.
+        and are excluded when ``max_len`` is given) and, for paged
+        layouts only, the page-pool kv_dtype (schema v6: "" keeps the
+        cache dtype, "int8" quantizes pages — the dense layout has no
+        page pool to retype, so page_size == 0 stays full-precision).
+        Always includes the engine's untuned default (8 slots, dense)
+        so tuning can never regress below the fallback.
 
         >>> [c.slots for c in DesignSpace.serve(max_slots=4)
         ...  if c.page_size == 0]
         [1, 2, 4, 8]
         >>> sorted({c.page_size for c in DesignSpace.serve(max_len=24)})
         [0, 16, 32]
+        >>> sorted({(c.page_size, c.kv_dtype)
+        ...         for c in DesignSpace.serve(max_len=24)})
+        [(0, ''), (16, ''), (16, 'int8'), (32, ''), (32, 'int8')]
         """
         slots = {s for s in cls.SERVE_SLOTS if s <= max(max_slots, 1)}
         slots.add(8)
         pages = [p for p in cls.SERVE_PAGE_SIZES
                  if max_len <= 0 or p == 0 or p < 2 * max_len]
-        return [ServeCandidate(slots=s, page_size=p)
-                for s in sorted(slots) for p in pages]
+        return [ServeCandidate(slots=s, page_size=p, kv_dtype=kd)
+                for s in sorted(slots) for p in pages
+                for kd in cls.SERVE_KV_DTYPES if p or not kd]
 
     @classmethod
     def wkv(cls, t: int, n: int) -> List["WkvCandidate"]:

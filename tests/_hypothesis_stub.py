@@ -9,8 +9,8 @@ hypothesis's shrinking and adaptive search.
 
 Supported surface (exactly what tests/ uses): ``given``, ``settings``
 with ``max_examples``/``deadline``, and strategies ``integers``,
-``lists``, ``sampled_from``, ``tuples``, ``composite``, plus
-``.map``/``.filter``.
+``lists``, ``sampled_from``, ``tuples``, ``booleans``, ``composite``,
+plus ``.map``/``.filter``.
 """
 
 from __future__ import annotations
@@ -64,6 +64,10 @@ class _StrategiesNamespace:
     def tuples(*strategies: _Strategy) -> _Strategy:
         return _Strategy(
             lambda rng: tuple(s.example(rng) for s in strategies))
+
+    @staticmethod
+    def booleans() -> _Strategy:
+        return _Strategy(lambda rng: bool(rng.randrange(2)))
 
     @staticmethod
     def composite(fn: Callable) -> Callable[..., _Strategy]:

@@ -169,10 +169,13 @@ def _rand_block_tables(b, max_pages, n_pool, lengths, page_size, seed=0):
     return jnp.asarray(bt)
 
 
+@pytest.mark.parametrize("buffers", [1, 2])
 @pytest.mark.parametrize("hq,hkv,ps", [(8, 2, 16), (4, 4, 32), (16, 2, 64)])
-def test_flash_paged_decode_matches_ref(hq, hkv, ps):
+def test_flash_paged_decode_matches_ref(hq, hkv, ps, buffers):
     """The block-table kernel must equal the gather-then-dense oracle,
-    including a partial last page and a one-token slot."""
+    including a partial last page and a one-token slot — on both the
+    BlockSpec-gather path (buffers=1) and the explicit-DMA
+    double-buffered pipeline (buffers=2)."""
     b, d, n_pool = 3, 64, 24
     lengths = np.asarray([3 * ps + 5, ps, 1])
     max_pages = 4
@@ -182,11 +185,84 @@ def test_flash_paged_decode_matches_ref(hq, hkv, ps):
     bt = _rand_block_tables(b, max_pages, n_pool, lengths, ps)
     ln = jnp.asarray(lengths, jnp.int32)
     out = ops.decode_paged(q, k_pages, v_pages, block_tables=bt,
-                           length=ln, mode="kernel")
+                           length=ln, buffers=buffers, mode="kernel")
     exp = ref.ref_paged_decode_attention(q, k_pages, v_pages, bt,
                                          length=ln)
     np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
                                rtol=2e-5, atol=2e-5)
+
+
+def _quantize_pool(pages):
+    from repro.serving.quant import quantize_kv_pages
+    return quantize_kv_pages(pages)
+
+
+@pytest.mark.parametrize("buffers", [1, 2])
+def test_flash_paged_decode_int8_matches_dequant_oracle(buffers):
+    """int8 pages + per-row scales through the fused-dequant kernel must
+    equal the dequantize-then-attend oracle to float tolerance (the
+    kernel dequantizes inside its split-K page loop with the exact same
+    q.astype(f32) * scale arithmetic)."""
+    b, hq, hkv, d, ps, n_pool = 3, 8, 2, 64, 16, 24
+    lengths = np.asarray([3 * ps + 5, ps, 1])
+    q = randf((b, hq, d))
+    kq, ksc = _quantize_pool(randf((n_pool + 1, hkv, ps, d)))
+    vq, vsc = _quantize_pool(randf((n_pool + 1, hkv, ps, d)))
+    bt = _rand_block_tables(b, 4, n_pool, lengths, ps)
+    ln = jnp.asarray(lengths, jnp.int32)
+    out = ops.decode_paged(q, kq, vq, block_tables=bt, length=ln,
+                           k_scale=ksc, v_scale=vsc, buffers=buffers,
+                           mode="kernel")
+    exp = ref.ref_paged_decode_attention(q, kq, vq, bt, length=ln,
+                                         k_scale=ksc, v_scale=vsc)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("quantized", [False, True], ids=["f32", "int8"])
+def test_paged_decode_double_buffer_bit_identical(quantized):
+    """buffers=2 (explicit-DMA pipelined page gather) and buffers=1
+    (BlockSpec gather) share one arithmetic body — their outputs must
+    be BIT-identical, not just close: any drift means the pipeline
+    reordered or re-rounded the online softmax."""
+    b, hq, hkv, d, ps, n_pool = 4, 8, 2, 64, 16, 24
+    lengths = np.asarray([3 * ps + 5, 2 * ps, ps - 1, 1])
+    q = randf((b, hq, d))
+    if quantized:
+        kp, ks = _quantize_pool(randf((n_pool + 1, hkv, ps, d)))
+        vp, vs = _quantize_pool(randf((n_pool + 1, hkv, ps, d)))
+        scales = {"k_scale": ks, "v_scale": vs}
+    else:
+        kp = randf((n_pool + 1, hkv, ps, d))
+        vp = randf((n_pool + 1, hkv, ps, d))
+        scales = {}
+    bt = _rand_block_tables(b, 4, n_pool, lengths, ps, seed=11)
+    ln = jnp.asarray(lengths, jnp.int32)
+    one = ops.decode_paged(q, kp, vp, block_tables=bt, length=ln,
+                           buffers=1, mode="kernel", **scales)
+    two = ops.decode_paged(q, kp, vp, block_tables=bt, length=ln,
+                           buffers=2, mode="kernel", **scales)
+    np.testing.assert_array_equal(np.asarray(one), np.asarray(two))
+
+
+def test_paged_decode_scale_validation():
+    """int8 pools without scale rows would be silently wrong (raw
+    quantized integers attended as values); float pools with scale rows
+    are a caller bug.  Both must raise."""
+    b, hkv, ps, d, n_pool = 2, 2, 16, 64, 8
+    q = randf((b, 8, d))
+    bt = _rand_block_tables(b, 2, n_pool, [ps, 4], ps)
+    ln = jnp.asarray([ps, 4], jnp.int32)
+    fpool = randf((n_pool + 1, hkv, ps, d))
+    qpool, scale = _quantize_pool(fpool)
+    with pytest.raises(ValueError, match="k_scale"):
+        ops.decode_paged(q, qpool, qpool, block_tables=bt, length=ln)
+    with pytest.raises(ValueError, match="int8"):
+        ops.decode_paged(q, fpool, fpool, block_tables=bt, length=ln,
+                         k_scale=scale, v_scale=scale)
+    with pytest.raises(ValueError, match="buffers"):
+        ops.decode_paged(q, fpool, fpool, block_tables=bt, length=ln,
+                         buffers=3, mode="kernel")
 
 
 def test_paged_decode_equals_dense_on_gathered_cache():

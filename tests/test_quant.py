@@ -1,5 +1,7 @@
-"""int8 weight-only quantization (the paper's multi-precision GEMM as a
-serving feature): round-trip error bounds, structural preservation, and
+"""int8 quantization: weight-only GEMM quantization (the paper's
+multi-precision GEMM as a serving feature) and quantized KV pages —
+round-trip error bounds, analytic decode tolerance bounds per page
+dtype, exact-quantization bit-identity, structural preservation, and
 end-to-end generation quality."""
 
 import jax
@@ -8,9 +10,12 @@ import numpy as np
 import pytest
 
 from repro import configs as C
+from repro.kernels import ops
 from repro.models import forward, init_params
 from repro.serving.engine import ServeConfig, ServeEngine
-from repro.serving.quant import (dequantize_weight, maybe_dequant,
+from repro.serving.quant import (KV_PAGE_DTYPES, dequantize_kv,
+                                 dequantize_weight, maybe_dequant,
+                                 quantize_kv_pages, quantize_kv_row,
                                  quantize_params, quantize_weight)
 
 
@@ -60,6 +65,111 @@ def test_quantized_forward_quality(arch):
     pf = np.asarray(jax.nn.softmax(lg_f[:, -1]))
     pq = np.asarray(jax.nn.softmax(lg_q[:, -1]))
     assert float(np.abs(pf - pq).sum(-1).max()) / 2 < 0.1
+
+
+# ---------------------------------------------------------------------------
+# Quantized KV pages (ServeConfig.kv_dtype): tolerance bounds per dtype
+# ---------------------------------------------------------------------------
+
+
+def _paged_case(seed, b, hq, hkv, d, ps, max_pages):
+    """A random paged-decode problem with disjoint per-slot page lists."""
+    rng = np.random.default_rng(seed)
+    lengths = rng.integers(1, max_pages * ps + 1, size=(b,))
+    n_pool = int(sum(-(-int(ln) // ps) for ln in lengths)) + 1
+    q = jnp.asarray(rng.normal(size=(b, hq, d)), jnp.float32)
+    kf = jnp.asarray(rng.normal(size=(n_pool + 1, hkv, ps, d)), jnp.float32)
+    vf = jnp.asarray(rng.normal(size=(n_pool + 1, hkv, ps, d)), jnp.float32)
+    perm = list(rng.permutation(n_pool))
+    bt = np.full((b, max_pages), n_pool, np.int32)
+    for i, ln in enumerate(lengths):
+        n = -(-int(ln) // ps)
+        bt[i, :n], perm = perm[:n], perm[n:]
+    return q, kf, vf, jnp.asarray(bt), jnp.asarray(lengths, jnp.int32)
+
+
+def test_kv_row_roundtrip_error_bound():
+    """Per-row symmetric int8: |dequant(quant(x)) - x| <= scale/2 per
+    element, and all-zero rows round-trip exactly (scale 0)."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(6, 4, 16, 32)), jnp.float32)
+    x = x.at[0, 0, 0].set(0.0)                     # a zero row
+    q, scale = quantize_kv_row(x)
+    assert q.dtype == jnp.int8 and scale.shape == x.shape[:-1]
+    back = dequantize_kv(q, scale)
+    bound = np.asarray(scale)[..., None] / 2 + 1e-7
+    assert (np.abs(np.asarray(back - x)) <= bound).all()
+    np.testing.assert_array_equal(np.asarray(back[0, 0, 0]),
+                                  np.zeros((32,), np.float32))
+
+
+@pytest.mark.parametrize("kv_dtype", KV_PAGE_DTYPES)
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_kv_page_dtype_decode_error_bound(kv_dtype, seed):
+    """Per-dtype tolerance of the paged decode under page retyping,
+    against the f32 kernel on the same pool.  float32 is bit-exact;
+    bfloat16 within its mantissa rounding; int8 within an *analytic*
+    bound assembled from the stored scale rows: V-dequant error is at
+    most max(v_scale)/2 (the output is a convex combination of V rows),
+    and K-dequant perturbs each logit by at most
+    attn_scale * max_row||q||_1 * max(k_scale)/2, which moves the
+    softmax weights by at most expm1(2*that) in total variation."""
+    b, hq, hkv, d, ps, max_pages = 3, 8, 2, 32, 16, 3
+    q, kf, vf, bt, ln = _paged_case(seed, b, hq, hkv, d, ps, max_pages)
+    base = ops.decode_paged(q, kf, vf, block_tables=bt, length=ln,
+                            mode="kernel")
+    if kv_dtype == "int8":
+        kq, ks = quantize_kv_pages(kf)
+        vq, vs = quantize_kv_pages(vf)
+        out = ops.decode_paged(q, kq, vq, block_tables=bt, length=ln,
+                               k_scale=ks, v_scale=vs, mode="kernel")
+        ds = (d ** -0.5) * float(np.abs(np.asarray(q)).sum(-1).max()) \
+            * float(np.max(np.asarray(ks))) / 2
+        bound = float(np.max(np.asarray(vs))) / 2 \
+            + float(np.expm1(2 * ds)) * float(np.abs(np.asarray(vf)).max()) \
+            + 1e-4
+    else:
+        pages_dt = jnp.dtype(kv_dtype)
+        out = ops.decode_paged(q, kf.astype(pages_dt).astype(jnp.float32),
+                               vf.astype(pages_dt).astype(jnp.float32),
+                               block_tables=bt, length=ln, mode="kernel")
+        bound = 0.0 if kv_dtype == "float32" else 0.1   # bf16 rounding
+    err = float(np.abs(np.asarray(out) - np.asarray(base)).max())
+    if kv_dtype == "float32":
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(base))
+    else:
+        assert err <= bound, (kv_dtype, seed, err, bound)
+        assert err > 0                      # the bound is doing real work
+
+
+@pytest.mark.parametrize("buffers", [1, 2])
+def test_int8_exact_quantization_bit_identical(buffers):
+    """When every KV row is integer-valued with max |row| = 127 the
+    per-row scale is exactly 1.0 and quantization is lossless — the
+    int8 kernel must then be BIT-identical to the f32 kernel on the
+    same values (the fused dequant multiplies by exactly 1.0)."""
+    rng = np.random.default_rng(3)
+    b, hq, hkv, d, ps, max_pages = 2, 8, 2, 32, 16, 2
+    q, _, _, bt, ln = _paged_case(3, b, hq, hkv, d, ps, max_pages)
+    n_pool = int(np.asarray(bt).max()) + 1      # includes gaps; fine
+    shape = (n_pool + 1, hkv, ps, d)
+    kf = rng.integers(-127, 128, size=shape).astype(np.float32)
+    vf = rng.integers(-127, 128, size=shape).astype(np.float32)
+    kf[..., 0] = 127.0                          # force scale = 1.0 per row
+    vf[..., 0] = -127.0
+    kf, vf = jnp.asarray(kf), jnp.asarray(vf)
+    kq, ks = quantize_kv_pages(kf)
+    vq, vs = quantize_kv_pages(vf)
+    np.testing.assert_array_equal(np.asarray(ks),
+                                  np.ones(shape[:-1], np.float32))
+    np.testing.assert_array_equal(np.asarray(dequantize_kv(kq, ks)),
+                                  np.asarray(kf))
+    f32 = ops.decode_paged(q, kf, vf, block_tables=bt, length=ln,
+                           buffers=buffers, mode="kernel")
+    i8 = ops.decode_paged(q, kq, vq, block_tables=bt, length=ln,
+                          k_scale=ks, v_scale=vs, buffers=buffers,
+                          mode="kernel")
+    np.testing.assert_array_equal(np.asarray(i8), np.asarray(f32))
 
 
 def test_engine_quantized_generation():
