@@ -499,12 +499,36 @@ def bench_serve_trace() -> None:
              f"eff={serve_efficiency(cfg, qrep['tok_s']):.2e}")
     finally:
         qpaged.close()
+    # Chunked prefill on the same trace (page-aligned 16-token chunks
+    # interleaved with in-flight decode under a token budget): the
+    # token streams must stay bit-identical to the monolithic dense
+    # run — chunking only changes *when* prompt KV is written, never
+    # what attention over it computes.
+    chunked = ServeEngine(cfg, params, ServeConfig(
+        batch_slots=slots, max_len=max_len, kv="paged", page_size=16,
+        prefill_chunk=16, token_budget=slots + 16))
+    try:
+        run_trace(chunked, trace, log=None)         # compile warmup
+        crep = run_trace(chunked, trace, log=None)
+        for tid, toks in rep["results"].items():
+            np.testing.assert_array_equal(
+                toks, crep["results"][tid],
+                err_msg=f"chunked diverged from monolithic (id {tid})")
+        emit("serve.chunked.s4", crep["wall_s"] * 1e6 / crep["tokens"],
+             f"tok_s={crep['tok_s']:.1f} p50={crep['p50_ms']:.2f}ms "
+             f"p99={crep['p99_ms']:.2f}ms chunk=16 "
+             f"budget={slots + 16} chunks={crep['prefill_chunks']} "
+             f"mono_p99={prep['p99_ms']:.2f}ms "
+             f"eff={serve_efficiency(cfg, crep['tok_s']):.2e}")
+    finally:
+        chunked.close()
 
 
 def bench_serve_tuning() -> None:
-    """The schema-v6 serve tunable: measure (batch_slots, page_size,
-    kv_dtype) candidates end to end — dense, paged and int8-paged
-    layouts compete on the same trace — and persist the winner."""
+    """The schema-v7 serve tunable: measure (batch_slots, page_size,
+    kv_dtype, prefill_chunk) candidates end to end — dense, paged,
+    int8-paged and chunked-prefill variants compete on the same trace
+    — and persist the winner."""
     from repro import configs as C
     from repro.tuning import dispatch
     cfg = C.get_smoke("smollm_360m")

@@ -1,28 +1,47 @@
 """Serving launcher: continuous batching over a request-trace workload.
 
-Replays a trace of requests with staggered arrivals (measured in engine
-steps, so runs are deterministic) through the continuous-batching
+Replays a trace of requests through the continuous-batching
 ``ServeEngine``: requests are admitted into free KV slots mid-decode and
-share decode steps with older in-flight requests.
+share decode steps with older in-flight requests.  Two replay modes:
+
+* **step-indexed** (default): arrivals are measured in engine steps
+  (``arrival``), every request is submitted up front and the scheduler
+  releases them as the step counter passes — fully deterministic.
+* **wall-clock**: arrivals are seconds (``arrival_s``); the launcher
+  submits each request the moment the clock reaches it, as a real
+  serving frontend would.  Selected automatically when the trace
+  carries ``arrival_s``, or by synthesizing bursty arrivals with
+  ``--arrivals {uniform,poisson,pareto}`` (seedable; ``--rate`` sets
+  the mean request rate).
 
     PYTHONPATH=src python -m repro.launch.serve --arch smollm_360m \
         --requests 6 --prompt_len 12 --max_new 16 --stagger 3
 
+    # bursty wall-clock replay, chunked prefill, latency-aware policy
+    PYTHONPATH=src python -m repro.launch.serve --arch smollm_360m \
+        --arrivals pareto --rate 16 --prefill-chunk 16 --policy latency
+
 Trace file (``--trace``, JSON lines; see docs/SERVING.md)::
 
     {"id": 0, "arrival": 0, "prompt_len": 12, "max_new": 16}
-    {"id": 1, "arrival": 4, "prompt": [17, 3, 99], "max_new": 8}
+    {"id": 1, "arrival_s": 0.25, "prompt": [17, 3, 99], "max_new": 8}
 
 ``prompt`` gives explicit token ids; ``prompt_len`` asks the launcher to
-synthesize that many random tokens.  ``--verify`` re-runs every request
+synthesize that many random tokens.  ``cancel_after: N`` cancels the
+request after its Nth streamed token (``engine.cancel`` frees its slot
+and pages the same step).  ``--verify`` re-runs every completed request
 through a one-slot one-shot *dense* ``generate()`` and checks the
 continuous outputs are identical (for ``--kv paged`` this is the
-paged-vs-dense bit-identity check).  ``--kv paged`` serves through the
+paged-vs-dense bit-identity check; with ``--prefill-chunk`` it is the
+chunked-vs-monolithic check too).  ``--kv paged`` serves through the
 ``repro.serving.kvpool`` page pool (``--page_size``/``--pool_pages``)
 and logs page-reclaim/preemption events plus the pool high-water mark;
 ``--kv-dtype int8`` stores the pages quantized (per-row scales,
 dequantized inside the fused decode kernel) at roughly a third of the
-f32 KV bytes.
+f32 KV bytes.  ``--prefill-chunk N`` splits each admitted prompt into
+N-token chunks interleaved with in-flight decode (0 = monolithic,
+-1 = ask the tuner); ``--token-budget``/``--policy`` control the
+unified step loop's budget and admission policy.
 ``--mesh D,M`` installs a pack mesh so the large GEMMs run as
 pack-level collective matmuls (simulate devices with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8``).
@@ -55,11 +74,17 @@ def load_trace(path: str, vocab_size: int, seed: int = 0) -> List[dict]:
                 prompt = rng.integers(0, vocab_size,
                                       size=(int(rec["prompt_len"]),)
                                       ).astype(np.int32)
-            out.append({"id": int(rec["id"]),
-                        "arrival": int(rec.get("arrival", 0)),
-                        "prompt": prompt,
-                        "max_new": int(rec["max_new"])})
-    return sorted(out, key=lambda r: (r["arrival"], r["id"]))
+            item = {"id": int(rec["id"]),
+                    "arrival": int(rec.get("arrival", 0)),
+                    "prompt": prompt,
+                    "max_new": int(rec["max_new"])}
+            if "arrival_s" in rec:
+                item["arrival_s"] = float(rec["arrival_s"])
+            if "cancel_after" in rec:
+                item["cancel_after"] = int(rec["cancel_after"])
+            out.append(item)
+    return sorted(out, key=lambda r: (r.get("arrival_s", 0.0),
+                                      r["arrival"], r["id"]))
 
 
 def resolve_trace_path(name: str) -> str:
@@ -91,30 +116,145 @@ def synth_trace(requests: int, prompt_len: int, max_new: int,
             for i in range(requests)]
 
 
-def run_trace(engine, trace: List[dict],
-              log: Optional[Callable[[str], None]] = print) -> dict:
-    """Replay ``trace`` through the continuous-batching loop.  Returns
-    {results: {trace_id: tokens}, wall_s, tokens, tok_s, p50_ms, p99_ms,
-    ttft_p50_ms, ttft_p99_ms, shared_steps, ...}.
+def gen_arrivals(kind: str, n: int, rate: float, seed: int = 0
+                 ) -> np.ndarray:
+    """Seedable arrival times (seconds, first at 0) for ``n`` requests
+    at a mean rate of ``rate`` req/s.
 
-    Latency attribution is split by phase: ``p50/p99_ms`` cover
-    *decode-only* inter-token latency (each decoded token is charged the
-    step's batched-decode duration), while ``ttft_p50/p99_ms`` cover
-    time-to-first-token (runnable -> first emission, which absorbs queue
-    wait + prefill).  Charging a mixed prefill+decode step's whole wall
-    time to every token it emitted — the old scheme — let one admission
-    pollute the inter-token p99 of every in-flight request."""
+    * ``uniform`` — evenly spaced, gap 1/rate;
+    * ``poisson`` — exponential inter-arrivals (memoryless load);
+    * ``pareto``  — Lomax(alpha=1.5) inter-arrivals scaled to mean
+      1/rate: heavy-tailed, so requests cluster into bursts separated
+      by long quiet gaps.  This is the adversarial case for monolithic
+      prefill — a burst admits several prompts back to back, and every
+      in-flight stream stalls for each whole-prompt prefill.
+
+    >>> a = gen_arrivals("uniform", 4, 2.0)
+    >>> [round(float(x), 2) for x in a]
+    [0.0, 0.5, 1.0, 1.5]
+    >>> b = gen_arrivals("pareto", 100, 8.0, seed=1)
+    >>> (bool(b[0] == 0.0), bool(np.all(np.diff(b) >= 0)))
+    (True, True)
+    """
+    if rate <= 0:
+        raise ValueError(f"rate must be > 0, got {rate}")
+    rng = np.random.default_rng(seed)
+    if kind == "uniform":
+        gaps = np.full(n, 1.0 / rate)
+    elif kind == "poisson":
+        gaps = rng.exponential(1.0 / rate, size=n)
+    elif kind == "pareto":
+        alpha = 1.5
+        gaps = rng.pareto(alpha, size=n) * (alpha - 1.0) / rate
+    else:
+        raise ValueError(f"unknown arrival kind {kind!r}")
+    return np.cumsum(gaps) - gaps[0]
+
+
+def bursty_trace(requests: int, prompt_len: int, max_new: int,
+                 kind: str, rate: float, vocab_size: int, seed: int = 0
+                 ) -> List[dict]:
+    """Wall-clock trace with ``kind`` arrivals and heterogeneous sizes:
+    prompt lengths drawn from [prompt_len/2, 2*prompt_len] so bursts mix
+    short and long prefills, max_new from [max_new/2, max_new].  Prompts
+    use the same per-id rng as :func:`load_trace`, so a trace dumped
+    with ``--dump-trace`` (which stores only ``prompt_len``) reloads to
+    bit-identical prompts."""
+    rng = np.random.default_rng(seed)
+    arrivals = gen_arrivals(kind, requests, rate, seed)
+    out = []
+    for i in range(requests):
+        plen = int(rng.integers(max(1, prompt_len // 2),
+                                2 * prompt_len + 1))
+        mnew = int(rng.integers(max(1, max_new // 2), max_new + 1))
+        prompt = np.random.default_rng(seed + i).integers(
+            0, vocab_size, size=(plen,)).astype(np.int32)
+        out.append({"id": i, "arrival": 0,
+                    "arrival_s": round(float(arrivals[i]), 3),
+                    "prompt": prompt, "max_new": mnew})
+    return out
+
+
+def dump_trace(path: str, trace: List[dict]) -> None:
+    """Write ``trace`` as JSONL, storing ``prompt_len`` instead of the
+    tokens (``load_trace`` re-synthesizes them per id)."""
+    with open(path, "w") as f:
+        for t in trace:
+            rec: Dict[str, object] = {"id": t["id"]}
+            if "arrival_s" in t:
+                rec["arrival_s"] = t["arrival_s"]
+            elif t.get("arrival"):
+                rec["arrival"] = t["arrival"]
+            rec["prompt_len"] = int(len(t["prompt"]))
+            rec["max_new"] = t["max_new"]
+            if "cancel_after" in t:
+                rec["cancel_after"] = t["cancel_after"]
+            f.write(json.dumps(rec) + "\n")
+
+
+def run_trace(engine, trace: List[dict],
+              log: Optional[Callable[[str], None]] = print, *,
+              wallclock: Optional[bool] = None, speed: float = 1.0,
+              stream: Optional[Callable[[int, int, bool], None]] = None
+              ) -> dict:
+    """Replay ``trace`` through the unified token-budgeted loop.
+    Returns {results: {trace_id: tokens}, wall_s, tokens, tok_s,
+    p50_ms, p99_ms, ttft_p50_ms, ttft_p99_ms, shared_steps, ...}.
+
+    Replay mode: ``wallclock=None`` auto-selects — wall-clock when any
+    record carries ``arrival_s`` (requests are submitted when the clock
+    reaches them, scaled by ``speed``), step-indexed otherwise (all
+    submitted up front with their step arrivals).
+
+    Latency attribution: ``p50/p99_ms`` are *per-stream* inter-token
+    gaps — the wall time between a request's consecutive emissions
+    (the engine's ``itl_ms`` events; first tokens are TTFT, never ITL).
+    A stream stalled while the engine prefills someone else's prompt
+    shows that stall in its next gap, which is exactly what chunked
+    prefill exists to bound.  ``ttft_p50/p99_ms`` cover runnable ->
+    first emission (queue wait + prefill).
+
+    ``stream(trace_id, token, done)`` is invoked per emitted token;
+    trace records with ``cancel_after: N`` are cancelled from the
+    stream callback after their Nth token (mid-step, same-step page
+    reclaim)."""
     log = log or (lambda s: None)
-    rid_to_tid = {}
+    rid_to_tid: Dict[int, int] = {}
+    counts: Dict[int, int] = {}
+    cancelled_tids: List[int] = []
+    if wallclock is None:
+        wallclock = any("arrival_s" in t for t in trace)
+
+    def _cb(t):
+        limit = t.get("cancel_after")
+        tid = t["id"]
+
+        def cb(rid, tok, done):
+            if stream is not None:
+                stream(tid, tok, done)
+            counts[rid] = counts.get(rid, 0) + 1
+            if limit is not None and counts[rid] >= limit and not done:
+                if engine.cancel(rid):
+                    cancelled_tids.append(tid)
+        return cb
+
+    def _submit(t, arrival=None):
+        need_cb = stream is not None or "cancel_after" in t
+        rid = engine.submit(t["prompt"], t["max_new"], arrival=arrival,
+                            on_token=_cb(t) if need_cb else None)
+        rid_to_tid[rid] = t["id"]
+
     # Trace arrivals are relative to the replay's start: offset by the
     # engine's current step so a warm engine (e.g. a bench replaying
     # the trace after a compile warmup) still sees the stagger.
     base = engine.step_count
-    for t in trace:
-        rid = engine.submit(t["prompt"], t["max_new"],
-                            arrival=base + t["arrival"])
-        rid_to_tid[rid] = t["id"]
-    token_lat: List[float] = []     # decode-only, seconds
+    pending: List[dict] = []
+    if wallclock:
+        pending = sorted(trace, key=lambda t: t.get("arrival_s", 0.0))
+    else:
+        for t in trace:
+            _submit(t, base + t["arrival"])
+    token_lat: List[float] = []     # per-stream inter-token gaps, s
     ttft: List[float] = []          # runnable -> first token, seconds
     paged = engine.kv_mode == "paged"
     # Per-replay deltas: the engine's counters are lifetime-cumulative,
@@ -122,11 +262,21 @@ def run_trace(engine, trace: List[dict],
     reclaim_base = engine.pool.total_reclaimed if paged else 0
     preempt_base = engine.stats["preemptions"]
     t0 = time.monotonic()
-    while not engine.sched.done():
+    while pending or not engine.sched.done():
+        if pending:
+            now_s = (time.monotonic() - t0) * speed
+            while pending and pending[0].get("arrival_s", 0.0) <= now_s:
+                _submit(pending.pop(0))
+            if engine.sched.done():
+                # Idle until the next arrival: nothing to decode yet.
+                wait = (pending[0].get("arrival_s", 0.0) / speed
+                        - (time.monotonic() - t0))
+                if wait > 0:
+                    time.sleep(min(wait, 0.02))
+                continue
         reclaimed0 = engine.pool.total_reclaimed if paged else 0
         ev = engine.step()
-        dt = ev["timings"]["decode_ms"] / 1e3
-        token_lat += [dt] * len(ev["decoded"])
+        token_lat += [ms / 1e3 for ms in ev["itl_ms"].values()]
         ttft += [ms / 1e3 for ms in ev["ttft_ms"].values()]
         older = sorted(set(ev["decoded"]) - set(ev["admitted"]))
         if ev["admitted"] and older:
@@ -137,6 +287,9 @@ def run_trace(engine, trace: List[dict],
         for rid in ev.get("preempted", []):
             log(f"[serve] preempted id={rid_to_tid[rid]} (pool "
                 f"exhausted) — requeued at the head")
+        for rid in ev.get("cancelled", []):
+            log(f"[serve] cancelled id={rid_to_tid[rid]} — slot"
+                f"{' and pages' if paged else ''} freed this step")
         for rid in ev["finished"]:
             n = len(engine.result(rid))
             log(f"[serve] done id={rid_to_tid[rid]} tokens={n}")
@@ -152,6 +305,7 @@ def run_trace(engine, trace: List[dict],
     tokens = sum(len(v) for v in results.values())
     rep = {
         "results": results,
+        "cancelled_ids": sorted(cancelled_tids),
         "wall_s": wall,
         "tokens": tokens,
         "tok_s": tokens / wall if wall > 0 else float("inf"),
@@ -165,6 +319,7 @@ def run_trace(engine, trace: List[dict],
         if ttft else float("nan"),
         "shared_steps": engine.stats["shared_steps"],
         "decode_steps": engine.stats["decode_steps"],
+        "prefill_chunks": engine.stats["prefill_chunks"],
         "kv_bytes_hwm": engine.kv_bytes_high_water(),
         "kv_bytes_reserved": engine.kv_bytes_reserved(),
     }
@@ -185,11 +340,28 @@ def main() -> None:
     ap.add_argument("--prompt_len", type=int, default=16)
     ap.add_argument("--max_new", type=int, default=24)
     ap.add_argument("--stagger", type=int, default=3,
-                    help="arrival gap between requests, in engine steps")
+                    help="arrival gap between requests, in engine steps "
+                         "(step-indexed replay)")
+    ap.add_argument("--arrivals", type=str, default="steps",
+                    choices=("steps", "uniform", "poisson", "pareto"),
+                    help="synthetic arrival process: 'steps' keeps the "
+                         "deterministic --stagger replay; the rest "
+                         "generate wall-clock arrival_s at --rate req/s "
+                         "(seedable via --seed) and replay in real time")
+    ap.add_argument("--rate", type=float, default=8.0,
+                    help="mean request rate (req/s) for --arrivals")
+    ap.add_argument("--speed", type=float, default=1.0,
+                    help="wall-clock replay speedup factor (2 = replay "
+                         "arrival_s twice as fast)")
     ap.add_argument("--trace", type=str, default=None,
                     help="JSONL trace file, or a bare name resolved to "
                          "benchmarks/traces/<name>.jsonl (overrides "
                          "--requests/--prompt_len/--stagger)")
+    ap.add_argument("--dump-trace", dest="dump_trace", type=str,
+                    default=None,
+                    help="write the (synthesized) trace as JSONL and "
+                         "continue — how benchmarks/traces/*.jsonl are "
+                         "(re)generated")
     ap.add_argument("--trace-out", type=str, default=None,
                     help="write a Chrome-trace-event JSON of the run "
                          "(open in chrome://tracing or ui.perfetto.dev); "
@@ -200,6 +372,10 @@ def main() -> None:
                          "roofline efficiency; see docs/OBSERVABILITY.md)")
     ap.add_argument("--prom-out", type=str, default=None,
                     help="write the metrics as Prometheus text exposition")
+    ap.add_argument("--warmup", action="store_true",
+                    help="replay the trace once first (compiles every "
+                         "program), reset the metrics, then measure — "
+                         "use when --metrics-out feeds a latency gate")
     ap.add_argument("--kv", choices=("dense", "paged"), default="dense",
                     help="KV layout: dense per-slot max_len rows, or "
                          "the kvpool page pool + block tables")
@@ -214,6 +390,25 @@ def main() -> None:
     ap.add_argument("--pool_pages", type=int, default=0,
                     help="paged: pool capacity in pages (0 = the "
                          "dense-equivalent slots * ceil(max_len/page))")
+    ap.add_argument("--prefill-chunk", dest="prefill_chunk", type=int,
+                    default=0,
+                    help="split each prompt into N-token chunks "
+                         "interleaved with decode (0 = monolithic "
+                         "prefill, -1 = resolve from the tuner; paged "
+                         "runs round N up to a page multiple)")
+    ap.add_argument("--token-budget", dest="token_budget", type=int,
+                    default=0,
+                    help="per-step token budget for the unified loop "
+                         "(0 = unbudgeted: one chunk per prefilling "
+                         "slot per step)")
+    ap.add_argument("--policy", type=str, default="fifo",
+                    choices=("fifo", "latency"),
+                    help="admission policy: fifo admits whenever a slot "
+                         "fits; latency defers admission while the "
+                         "decode budget is saturated or inter-token p99 "
+                         "exceeds its target")
+    ap.add_argument("--stream", action="store_true",
+                    help="print every token as the engine emits it")
     ap.add_argument("--eos_id", type=int, default=None,
                     help="token id that ends a request early (frees its "
                          "slot and, when paged, its KV pages that step)")
@@ -226,8 +421,8 @@ def main() -> None:
                     help="install a (data, model) pack mesh")
     ap.add_argument("--pack_min_flops", type=float, default=2.0 * 1024 ** 3)
     ap.add_argument("--verify", action="store_true",
-                    help="check each request against a one-shot "
-                         "single-slot generate() (greedy only)")
+                    help="check each completed request against a "
+                         "one-shot single-slot generate() (greedy only)")
     args = ap.parse_args()
     if args.verify and args.temperature > 0.0:
         raise SystemExit(
@@ -253,9 +448,16 @@ def main() -> None:
     if args.trace:
         trace = load_trace(resolve_trace_path(args.trace),
                            cfg.vocab_size, seed=args.seed)
+    elif args.arrivals != "steps":
+        trace = bursty_trace(args.requests, args.prompt_len,
+                             args.max_new, args.arrivals, args.rate,
+                             cfg.vocab_size, seed=args.seed)
     else:
         trace = synth_trace(args.requests, args.prompt_len, args.max_new,
                             args.stagger, cfg.vocab_size, seed=args.seed)
+    if args.dump_trace:
+        dump_trace(args.dump_trace, trace)
+        print(f"[serve] wrote {len(trace)} requests -> {args.dump_trace}")
     max_len = max(len(t["prompt"]) + t["max_new"] for t in trace) + 8
     mesh = None
     if args.mesh:
@@ -268,11 +470,25 @@ def main() -> None:
         quantize=args.quantize, eos_id=args.eos_id,
         kv=args.kv, page_size=args.page_size, pool_pages=args.pool_pages,
         kv_dtype=args.kv_dtype,
+        prefill_chunk=(None if args.prefill_chunk < 0
+                       else args.prefill_chunk),
+        token_budget=args.token_budget, policy=args.policy,
         pack_mesh=mesh, pack_min_flops=args.pack_min_flops))
+    stream_cb = None
+    if args.stream:
+        def stream_cb(tid, tok, done):
+            print(f"[stream] id={tid} token={tok}"
+                  f"{' (done)' if done else ''}")
     try:
-        rep = run_trace(engine, trace)
-        assert len(rep["results"]) == len(trace), \
-            f"only {len(rep['results'])}/{len(trace)} requests completed"
+        if args.warmup:
+            run_trace(engine, trace, log=None)
+            engine.drain()
+            bundle.registry.reset_values()
+        rep = run_trace(engine, trace, stream=stream_cb,
+                        speed=args.speed)
+        expected = len(trace) - len(rep["cancelled_ids"])
+        assert len(rep["results"]) == expected, \
+            f"only {len(rep['results'])}/{expected} requests completed"
         print(f"[serve] {rep['tokens']} tokens in {rep['wall_s']:.2f}s "
               f"({rep['tok_s']:.1f} tok/s incl. compile) "
               f"p50={rep['p50_ms']:.1f}ms p99={rep['p99_ms']:.1f}ms "
@@ -281,6 +497,16 @@ def main() -> None:
               f"shared_steps={rep['shared_steps']} "
               f"decode_steps={rep['decode_steps']} arch={cfg.name} "
               f"slots={engine.scfg.batch_slots}")
+        if engine.prefill_chunk:
+            print(f"[serve] chunked prefill: chunk="
+                  f"{engine.prefill_chunk} "
+                  f"chunks={rep['prefill_chunks']} "
+                  f"budget={engine.scfg.token_budget} "
+                  f"policy={engine.sched.policy.name} "
+                  f"starved_steps={engine.stats['starved_steps']}")
+        if rep["cancelled_ids"]:
+            print(f"[serve] cancelled ids={rep['cancelled_ids']} "
+                  f"(slots/pages reclaimed same-step)")
         # The paper's %-of-peak analogue: achieved decode throughput
         # over the analytic device peak (VE2802 reference off-TPU).
         eff = obs.efficiency.serve_efficiency(cfg, rep["tok_s"])
@@ -303,7 +529,8 @@ def main() -> None:
             print(f"[serve] paged kv bypassed: arch {cfg.name} has "
                   f"non-attention state — dense layout in effect")
         if args.verify:
-            _verify(cfg, params, trace, rep["results"], engine.scfg)
+            done_trace = [t for t in trace if t["id"] in rep["results"]]
+            _verify(cfg, params, done_trace, rep["results"], engine.scfg)
         if args.trace_out:
             n = bundle.tracer.write(args.trace_out)
             obs.validate_chrome_trace(bundle.tracer.chrome_trace())
@@ -313,6 +540,7 @@ def main() -> None:
             run_section = {k: v for k, v in rep.items() if k != "results"}
             run_section["arch"] = cfg.name
             run_section["kv_mode"] = engine.kv_mode
+            run_section["prefill_chunk"] = engine.prefill_chunk
             obs.write_metrics(
                 args.metrics_out, bundle.registry,
                 extra={"run": run_section},
@@ -330,23 +558,28 @@ def main() -> None:
 
 def _verify(cfg, params, trace, results, scfg) -> None:
     """Re-run every request one-shot (one slot, same kernels/pack
-    context) and compare with the continuous-batching outputs.  For a
-    full-precision paged run the one-shot engine is *dense*, so this
-    is exactly the paged-vs-dense bit-identity check.  With a
+    context) and compare with the continuous-batching outputs.  The
+    one-shot engine always prefills monolithically, so with
+    ``prefill_chunk`` set this is the chunked-vs-whole-prompt
+    bit-identity check.  For a full-precision paged run the one-shot
+    engine is *dense*, so it is also the paged-vs-dense check.  With a
     quantized ``kv_dtype`` the one-shot reference keeps the same paged
     quantized layout (dense has no page pool to retype and would add
     quantization noise to the diff): the check then isolates the
-    continuous-batching machinery — admission, paging, batched decode
-    — which must be bit-identical run to run; the quantization *error*
-    itself is bounded separately (tests/test_quant.py)."""
+    continuous-batching machinery — admission, chunking, paging,
+    batched decode — which must be bit-identical run to run; the
+    quantization *error* itself is bounded separately
+    (tests/test_quant.py)."""
     import dataclasses
 
     from repro.serving.engine import ServeConfig, ServeEngine
     if scfg.kv_dtype is None:
-        one_scfg = dataclasses.replace(scfg, batch_slots=1, kv="dense")
+        one_scfg = dataclasses.replace(scfg, batch_slots=1, kv="dense",
+                                       prefill_chunk=0)
         ref_name = "one-shot dense generate()"
     else:
-        one_scfg = dataclasses.replace(scfg, batch_slots=1)
+        one_scfg = dataclasses.replace(scfg, batch_slots=1,
+                                       prefill_chunk=0)
         ref_name = f"one-shot paged/{scfg.kv_dtype} generate()"
     one = ServeEngine(cfg, params, one_scfg)
     try:

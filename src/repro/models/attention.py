@@ -1,8 +1,14 @@
 """Grouped-query attention with RoPE / M-RoPE, qk-norm, and KV caching.
 
-Supports the four execution shapes the assignment exercises:
+Supports the five execution shapes the assignment exercises:
   * train:   full causal self-attention, no cache;
   * prefill: causal self-attention that also writes the KV cache;
+  * chunked prefill: a prompt *chunk* at its cursor offset — scalar
+    ``cache_pos > 0`` with S > 1 writes the chunk's KV at the offset and
+    attends causally over the cache's grown prefix (``q_offset`` keys
+    the causal mask to absolute positions, RoPE angles come from the
+    caller's offset positions), so a prompt prefilled chunk-by-chunk is
+    bit-identical to one monolithic prefill;
   * decode:  one new token against a cached KV prefix (flash-decode path);
   * cross:   encoder-decoder cross attention (cache holds encoder KV).
 """
@@ -141,7 +147,8 @@ def attention(
     if ragged and s != 1:
         raise NotImplementedError(
             "per-slot cache_pos is a decode-only shape (S == 1); prefill "
-            "admits one request at a time at its own offset")
+            "admits one request (or one prompt chunk) at a time at its "
+            "own scalar offset")
     paged = cache is not None and "k_pages" in cache
     if paged:
         # Paged KV (kvpool): decode-only — prefill runs against a dense

@@ -55,6 +55,9 @@ class Counter:
             raise ValueError(f"counter {self.name} cannot decrease ({n})")
         self.value += n
 
+    def reset(self) -> None:
+        self.value = 0.0
+
 
 class Gauge:
     """Last-set value; tracks its own high-water mark."""
@@ -73,6 +76,10 @@ class Gauge:
 
     def add(self, delta: float) -> None:
         self.set(self.value + delta)
+
+    def reset(self) -> None:
+        self.value = 0.0
+        self.high_water = 0.0
 
 
 class Histogram:
@@ -160,6 +167,15 @@ class Histogram:
                 return lo + (hi - lo) * frac
             seen += c
         return self.max
+
+    def reset(self) -> None:
+        if self.buckets is not None:
+            self.counts = [0] * (len(self.buckets) + 1)
+        self._values = []
+        self.count = 0
+        self.sum = 0.0
+        self.min = math.inf
+        self.max = -math.inf
 
     def summary(self) -> Dict[str, object]:
         out: Dict[str, object] = {
@@ -257,6 +273,15 @@ class Registry:
         self.counters.clear()
         self.gauges.clear()
         self.histograms.clear()
+
+    def reset_values(self) -> None:
+        """Zero every instrument *in place*, keeping registrations (and
+        any handles call sites already hold) alive.  This is the warmup
+        seam: replay a trace once to compile everything, reset, then
+        measure — without rebinding the engine's instrument handles."""
+        for table in (self.counters, self.gauges, self.histograms):
+            for inst in table.values():
+                inst.reset()
 
     # -- export ------------------------------------------------------------
 

@@ -8,11 +8,26 @@ very next batched decode step alongside every older in-flight request —
 the serving analogue of the paper's staggered placement (keep every
 compute unit busy by offsetting work in time, Fig. 7).
 
-API: :meth:`ServeEngine.submit` queues a request, :meth:`step` runs one
-engine step (admissions + one batched decode), :meth:`drain` steps until
-idle and returns finished outputs.  The legacy one-shot
-:meth:`generate` is reimplemented on top of the same loop (all slots
-admitted at step 0) and stays numerics-identical for a uniform batch.
+API: :meth:`ServeEngine.submit` queues a request (optionally with a
+streaming per-token callback), :meth:`step` runs one engine step
+(admissions + chunked-prefill progress + one batched decode under a
+per-step token budget), :meth:`cancel` drops a request same-step,
+:meth:`drain` steps until idle and returns finished outputs.  The
+legacy one-shot :meth:`generate` is reimplemented on top of the same
+loop (all slots admitted at step 0) and stays numerics-identical for a
+uniform batch.
+
+``ServeConfig(prefill_chunk=N)`` replaces the monolithic per-admission
+prefill with a **unified token-budgeted loop**: each admitted prompt is
+split into page-aligned chunks; a slot mid-prefill sits in the
+``PREFILLING`` lifecycle state carrying a prompt cursor, one (or more,
+budget permitting) chunks advance per step, and the chunks run *in the
+same step* as every in-flight request's batched decode — so one long
+prompt can no longer blow out every stream's inter-token p99 (the
+serving analogue of the paper's staggered placement: no unit stalls
+behind a monolithic neighbor).  Chunked greedy outputs are bit-identical
+to monolithic prefill; which requests are admitted each step is the
+scheduler :class:`~repro.serving.scheduler.Policy`'s call.
 
 Prefill and decode are separately jitted; the decode program takes a
 (B,) *per-slot* position vector so ragged batches write KV at their own
@@ -32,7 +47,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -43,7 +58,8 @@ from repro.models import (decode_step, forward, init_cache,
 from repro.models.config import ModelConfig
 from repro.obs import get_obs
 from repro.serving.kvpool import BlockTables, PagePool, pages_for
-from repro.serving.scheduler import DECODE, Request, Scheduler, Slot
+from repro.serving.scheduler import (DECODE, PREFILLING, Request,
+                                     Scheduler, Slot)
 
 
 @dataclasses.dataclass
@@ -72,6 +88,26 @@ class ServeConfig:
     # a kv_dtype on an arch that bypasses to dense is an error (the
     # engine must not silently store full-precision pages).
     kv_dtype: Optional[str] = None
+    # Chunked prefill (tuner schema v7 `prefill_chunk` axis): 0 =
+    # monolithic per-admission prefill (the historical behavior,
+    # bit-for-bit); N > 0 splits each prompt into N-token chunks
+    # (paged: rounded up to a page multiple so chunk scatters write
+    # whole pages) advanced across steps in a PREFILLING lifecycle
+    # state, interleaved with in-flight decode; None = resolve from
+    # the tuner.  Archs with recurrent state or an enc-dec cross cache
+    # bypass to monolithic transparently (same eligibility predicate
+    # as the page pool).
+    prefill_chunk: Optional[int] = 0
+    # Per-step token budget for step(): decode claims one token per
+    # active slot first, the remainder is spent on prefill chunks
+    # (oldest admission first).  0 = unbudgeted — every PREFILLING
+    # slot then advances exactly one chunk per step (maximal
+    # interleave).  Forward progress is guaranteed either way: at
+    # least one chunk advances per step whenever a slot is mid-prefill.
+    token_budget: int = 0
+    # Admission policy: a repro.serving.scheduler.Policy name
+    # ("fifo" | "latency" | anything register_policy()-ed) or instance.
+    policy: Any = "fifo"
     # Pack-level sharding (repro.distributed.pack_gemm): when a mesh is
     # given, GEMMs above pack_min_flops — the lm head and the ffn
     # projections — run as pack/array collective matmuls over its model
@@ -214,6 +250,15 @@ class ServeEngine:
             self.pool = None
             self.blocks = None
             self._fresh_len = scfg.max_len
+        if scfg.prefill_chunk is None:
+            # Tuned chunk size (schema v7 `serve` op): measured best
+            # when the cache has one, else the analytic default
+            # (monolithic — tuning must never change numerics or
+            # latency shape unless measured).
+            from repro.tuning import dispatch
+            scfg = dataclasses.replace(
+                scfg, prefill_chunk=dispatch.serve_prefill_chunk(
+                    cfg, scfg.max_len, cfg.cdtype))
         self.cfg, self.params, self.scfg = cfg, params, scfg
         # Recurrent mixers (mamba/rwkv, incl. the rwkv channel-mix FFN)
         # thread state through *every* token, pad or not — a
@@ -224,6 +269,22 @@ class ServeEngine:
         self._exact_prefill = any(
             spec.mixer != "attn" or spec.ffn == "rwkv_cm"
             for spec in cfg.pattern)
+        # Chunked prefill shares the page pool's eligibility predicate:
+        # only archs whose whole per-token state is attention KV can
+        # stop a prefill mid-prompt and resume it next step (recurrent
+        # state threads through every token; an enc-dec cross cache is
+        # written once at full length).  Others bypass to monolithic.
+        chunk = int(scfg.prefill_chunk or 0)
+        if chunk < 0:
+            raise ValueError(f"ServeConfig.prefill_chunk must be >= 0 "
+                             f"(or None = tuner), got {chunk}")
+        if chunk and not paged_eligible(cfg):
+            chunk = 0
+        if chunk and self.kv_mode == "paged":
+            # Page-aligned chunks: every chunk's scratch span covers
+            # whole pages, so the per-chunk scatter writes full pages.
+            chunk = pages_for(chunk, scfg.page_size) * scfg.page_size
+        self.prefill_chunk = min(chunk, self._fresh_len)
         self.tuned_gemm_hits = 0
         self.packed_gemms = 0
         self._pack_ctx = None
@@ -263,11 +324,18 @@ class ServeEngine:
         self._prefill_full = jax.jit(
             lambda p, b, c: forward(p, b, cfg, caches=c,
                                     cache_pos=jnp.zeros((), jnp.int32))[:2])
+        # Chunk-offset prefill: the same full-logits forward, but the
+        # KV write offset / RoPE base is the slot's prompt cursor
+        # (traced, so one compiled program covers every cursor value).
+        self._prefill_chunk_fn = jax.jit(
+            lambda p, b, c, pos: forward(p, b, cfg, caches=c,
+                                         cache_pos=pos)[:2])
         if self.kv_mode == "paged":
             self._decode = jax.jit(
                 lambda p, t, pos, bt, c: decode_step(p, t, pos, cfg, c,
                                                      block_tables=bt))
             self._insert = jax.jit(self._insert_slot_pages)
+            self._insert_chunk = jax.jit(self._insert_chunk_pages)
         else:
             self._decode = jax.jit(
                 lambda p, t, pos, c: decode_step(p, t, pos, cfg, c))
@@ -282,9 +350,17 @@ class ServeEngine:
         self._h_ttft = obs.registry.histogram(
             "serve.ttft_ms", "runnable -> first token, per request")
         self._h_itl = obs.registry.histogram(
-            "serve.inter_token_ms", "decode-phase wall time per token")
+            "serve.inter_token_ms",
+            "per-stream gap between consecutive decode tokens "
+            "(first tokens are TTFT, not ITL)")
         self._c_tokens = obs.registry.counter(
             "serve.tokens_out", "tokens emitted")
+        self._c_chunks = obs.registry.counter(
+            "serve.prefill_chunks", "prompt chunks prefilled")
+        self._c_starved = obs.registry.counter(
+            "serve.decode_starved_steps",
+            "steps where in-flight streams stalled behind prefill work "
+            "longer than the batched decode itself")
         self._c_rejects = obs.registry.counter(
             "serve.admission_rejections",
             "arrived requests deferred by the paged fits() gate")
@@ -299,7 +375,11 @@ class ServeEngine:
         if self.pool is not None:
             self.pool.bind_metrics(obs.registry)
         # -- continuous-batching state (persistent across calls) ----------
-        self.sched = Scheduler(scfg.batch_slots, registry=obs.registry)
+        self.sched = Scheduler(scfg.batch_slots, policy=scfg.policy,
+                               registry=obs.registry)
+        # The policy reads the engine's live load picture (token
+        # budget, decode tokens in flight, measured inter-token p99).
+        self.sched.signals = self._admission_signals
         self.caches = None            # allocated at first admission
         self.step_count = 0
         self._next_rid = 0
@@ -308,10 +388,16 @@ class ServeEngine:
         self._finished: Dict[int, np.ndarray] = {}
         self._slot_req: Dict[int, Request] = {}   # slot idx -> live Request
         self._runnable_at: Dict[int, float] = {}  # rid -> perf_counter stamp
+        self._last_emit: Dict[int, float] = {}    # rid -> last token stamp
+        self._scratch: Dict[int, Any] = {}        # slot idx -> chunk scratch
+        self._on_token: Dict[int, Callable] = {}  # rid -> stream callback
+        self._cancel_log: List[int] = []          # cancels since last step
         self._kv_tokens_hwm = 0       # live-token high-water (dense + paged)
         self.stats = {"admitted": 0, "finished": 0, "prefills": 0,
-                      "decode_steps": 0, "shared_steps": 0,
-                      "preemptions": 0, "eos_exits": 0}
+                      "prefill_chunks": 0, "decode_steps": 0,
+                      "shared_steps": 0, "preemptions": 0,
+                      "eos_exits": 0, "cancelled": 0,
+                      "starved_steps": 0}
 
     # -- lifecycle ----------------------------------------------------------
 
@@ -351,6 +437,10 @@ class ServeEngine:
             for bucket in prefill_buckets(self.scfg.max_len):
                 shapes += model_gemm_shapes(self.cfg, 1, bucket,
                                             include_decode=False)
+        if self.prefill_chunk:
+            # Chunked prefill issues M = chunk GEMMs each step.
+            shapes += model_gemm_shapes(self.cfg, 1, self.prefill_chunk,
+                                        include_decode=False)
         return shapes
 
     def new_cache(self):
@@ -459,6 +549,51 @@ class ServeEngine:
             "v_pages": scat(fc["attn"]["v_pages"], oc["attn"]["v"]),
         }} for fc, oc in zip(full, one)]
 
+    def _insert_chunk_pages(self, full, one, page_ids, src_idx):
+        """Scatter one prefill *chunk*'s pages from the dense scratch
+        into the pool: ``src_idx`` (host-clamped, static length
+        chunk/page_size) picks the chunk's pages out of the scratch,
+        ``page_ids`` is the matching slice of the slot's block-table
+        row (out-of-range entries point at the null sink, absorbing
+        the clamped duplicates).  The incremental sibling of
+        :meth:`_insert_slot_pages` — O(chunk) pages written per call
+        instead of O(max_len)."""
+        mp, ps = self._max_pages, self.pool.page_size
+
+        def pick(dense):
+            # dense: (G, 1, Hkv, mp*ps, D) -> chunk pages
+            # (G, cpp, Hkv, ps, D)
+            g, _, hkv, _, d = dense.shape
+            pages = dense[:, 0].reshape(g, hkv, mp, ps, d) \
+                .transpose(0, 2, 1, 3, 4)
+            return pages[:, src_idx]
+
+        if self.scfg.kv_dtype == "int8":
+            from repro.serving.quant import quantize_kv_row
+
+            def scat_q(pool, spool, dense):
+                qrows, srows = quantize_kv_row(pick(dense))
+                return (pool.at[:, page_ids].set(qrows),
+                        spool.at[:, page_ids].set(srows))
+
+            out = []
+            for fc, oc in zip(full, one):
+                kq, ks = scat_q(fc["attn"]["k_pages"],
+                                fc["attn"]["k_scale"], oc["attn"]["k"])
+                vq, vs = scat_q(fc["attn"]["v_pages"],
+                                fc["attn"]["v_scale"], oc["attn"]["v"])
+                out.append({"attn": {"k_pages": kq, "v_pages": vq,
+                                     "k_scale": ks, "v_scale": vs}})
+            return out
+
+        def scat(pool, dense):
+            return pool.at[:, page_ids].set(pick(dense).astype(pool.dtype))
+
+        return [{"attn": {
+            "k_pages": scat(fc["attn"]["k_pages"], oc["attn"]["k"]),
+            "v_pages": scat(fc["attn"]["v_pages"], oc["attn"]["v"]),
+        }} for fc, oc in zip(full, one)]
+
     def _make_sampler(self):
         temp = self.scfg.temperature
         base = jax.random.PRNGKey(self.scfg.seed)
@@ -479,10 +614,16 @@ class ServeEngine:
 
     def submit(self, prompt: np.ndarray, max_new: int, *,
                arrival: Optional[int] = None,
-               enc_embeds: Optional[np.ndarray] = None) -> int:
+               enc_embeds: Optional[np.ndarray] = None,
+               on_token: Optional[Callable[[int, int, bool], None]]
+               = None) -> int:
         """Queue one request; returns its request id.  ``arrival`` (in
         engine steps) defaults to "now" — pass a later step to replay a
-        timed trace deterministically."""
+        timed trace deterministically.  ``on_token(rid, token, done)``
+        streams every emitted token the moment the step produces it
+        (``done`` marks the final token); the callback runs on the
+        engine thread and may call :meth:`cancel` — including on its
+        own stream — mid-step."""
         self._check_open("submit")
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if prompt.size == 0:
@@ -507,6 +648,8 @@ class ServeEngine:
         self.sched.submit(Request(
             rid=rid, prompt_len=int(prompt.size), max_new=int(max_new),
             arrival=arrival, prompt=prompt, enc_embeds=enc_embeds))
+        if on_token is not None:
+            self._on_token[rid] = on_token
         tr = self._obs.tracer
         tr.async_begin("request", rid, prompt_len=int(prompt.size),
                        max_new=int(max_new))
@@ -517,17 +660,32 @@ class ServeEngine:
             self._runnable_at[rid] = time.perf_counter()
         return rid
 
-    def step(self) -> Dict[str, List[int]]:
-        """One engine step: admit arrived requests into free slots
-        (prefill each at its own offset), grow paged slots' block
-        tables for the incoming token (preempting — FIFO-youngest-first
-        — when the pool is exhausted), then run one batched decode over
-        every active slot with per-slot positions.  A second admission
-        pass follows the decode, so pages/slots reclaimed *this step*
-        (EOS / completion) are immediately reusable by queued requests.
-        Returns the step's events ({admitted, decoded, finished,
-        preempted} request ids, per-request ``ttft_ms`` for first
-        tokens, and the step's phase ``timings``)."""
+    def step(self, token_budget: Optional[int] = None
+             ) -> Dict[str, List[int]]:
+        """One unified engine step under a per-step token budget:
+
+        1. admit arrived requests into free slots (the scheduler
+           policy's call) — monolithic admissions prefill whole, chunked
+           admissions enter ``PREFILLING`` with a zero prompt cursor;
+        2. advance chunked prefills (budget permitting) — a slot whose
+           cursor reaches the prompt end emits its first token and
+           joins *this* step's decode;
+        3. grow paged slots' block tables for the incoming token
+           (preempting — FIFO-youngest-first — when the pool is
+           exhausted), then run one batched decode over every active
+           slot with per-slot positions;
+        4. a second admission pass follows the decode, so pages/slots
+           reclaimed *this step* (EOS / completion / cancel) are
+           immediately reusable by queued requests.
+
+        Decode never starves behind a long prompt: in-flight slots
+        decode every step regardless of how much prefill is pending,
+        and prefill can't starve either (at least one chunk advances
+        per step).  ``token_budget`` overrides ``ServeConfig``'s for
+        this step.  Returns the step's events ({admitted, decoded,
+        finished, preempted, cancelled} request ids, per-request
+        ``ttft_ms`` for first tokens, per-stream ``itl_ms`` gaps, and
+        the step's phase ``timings``)."""
         self._check_open("step")
         if self.caches is None:
             self.caches = self.new_cache()
@@ -540,13 +698,21 @@ class ServeEngine:
             if r.arrival <= self.step_count and r.rid not in self._runnable_at:
                 self._runnable_at[r.rid] = now
         holdover = [s.rid for s in self.sched.active_slots()]
+        budget = (self.scfg.token_budget if token_budget is None
+                  else int(token_budget))
         events: Dict[str, Any] = {"admitted": [], "decoded": [],
                                   "finished": [], "preempted": [],
-                                  "ttft_ms": {}}
+                                  "cancelled": list(self._cancel_log),
+                                  "ttft_ms": {}, "itl_ms": {}}
+        self._cancel_log.clear()
         with tr.span("engine.step", cat="engine", step=self.step_count):
-            with tr.span("admit", cat="engine"):
-                self._admit(events)
+            self._admission_pass(events, "arrival")
             admit_ms = (time.perf_counter() - t_step) * 1e3
+            t_pf = time.perf_counter()
+            prefill_ms = 0.0
+            if any(s.state == PREFILLING for s in self.sched.slots):
+                self._advance_prefills(events, budget)
+                prefill_ms = (time.perf_counter() - t_pf) * 1e3
             if self.kv_mode == "paged":
                 self._grow_pages(events)
             active = self.sched.active_slots()
@@ -570,7 +736,7 @@ class ServeEngine:
                         logits, self.caches = self._decode(
                             self.params, jnp.asarray(self._tok),
                             jnp.asarray(pos),
-                            jnp.asarray(self.blocks.table), self.caches)
+                            jnp.asarray(self._decode_table()), self.caches)
                     else:
                         logits, self.caches = self._decode(
                             self.params, jnp.asarray(self._tok),
@@ -588,28 +754,82 @@ class ServeEngine:
                 # wrote a row at position `length` (pre-increment).
                 self._note_kv_tokens(sum(s.length + 1 for s in active))
                 for s in active:
+                    if s.state != DECODE:
+                        continue    # cancelled mid-step by a callback
                     s.length += 1
                     self._tok[s.index] = toks[s.index]
                     events["decoded"].append(s.rid)
-                    # Decode-only latency attribution: each token this
-                    # step cost one batched decode, not the mixed
-                    # prefill+decode wall time (TTFT carries that).
-                    self._h_itl.observe(decode_ms)
                     self._emit(s, int(toks[s.index]), events)
-            if events["finished"] or events["preempted"]:
+            if self._cancel_log:
+                # Mid-step cancels: a stream callback fired during this
+                # decode's emit loop and called cancel().
+                events["cancelled"].extend(self._cancel_log)
+                self._cancel_log.clear()
+            if holdover and active and admit_ms + prefill_ms > decode_ms:
+                # In-flight streams waited longer on prefill work than
+                # on their own batched decode — the starvation mode
+                # chunking exists to bound.
+                self._c_starved.inc()
+                self.stats["starved_steps"] += 1
+            if events["finished"] or events["preempted"] \
+                    or events["cancelled"]:
                 # Same-step reuse: whatever the decode just freed can
                 # admit a queued request now (joins the next decode).
-                with tr.span("admit", cat="engine"):
-                    self._admit(events)
+                self._admission_pass(events, "reclaim")
         self._note_kv_tokens(
             sum(s.length for s in self.sched.active_slots()))
         self._g_active.set(len(self.sched.active_slots()))
         self.step_count += 1
         events["timings"] = {
-            "admit_ms": admit_ms, "decode_ms": decode_ms,
+            "admit_ms": admit_ms, "prefill_ms": prefill_ms,
+            "decode_ms": decode_ms,
             "step_ms": (time.perf_counter() - t_step) * 1e3,
         }
         return events
+
+    def _decode_table(self) -> np.ndarray:
+        """Block tables as the decode program sees them: slots mid
+        chunked-prefill get an all-null-sink row, so the garbage token
+        their (inactive) lane writes cannot land on a real page that
+        prompt chunks were already scattered into.  Monolithic-only
+        runs return the live table untouched (no copy)."""
+        table = self.blocks.table
+        pre = [s.index for s in self.sched.slots
+               if s.state == PREFILLING]
+        if not pre:
+            return table
+        table = table.copy()
+        table[pre] = self.pool.num_pages    # the null sink page
+        return table
+
+    def _admission_pass(self, events: Dict[str, Any], phase: str) -> None:
+        """The single admission entry point — the arrival pass at the
+        top of :meth:`step` and the post-reclaim pass after decode both
+        funnel through here (``phase`` tags the trace span), so there
+        is exactly one place admissions happen."""
+        with self._obs.tracer.span("admit", cat="engine", phase=phase):
+            self._admit(events)
+
+    def _admission_signals(self) -> Dict[str, Any]:
+        """Live load picture the scheduler policy decides from (the
+        ``latency`` policy defers admission when the decode budget is
+        saturated or the measured inter-token p99 is over target)."""
+        chunk = self.prefill_chunk
+        backlog = 0
+        if chunk:
+            for s in self.sched.slots:
+                if s.state == PREFILLING:
+                    req = self._slot_req.get(s.index)
+                    if req is not None:
+                        backlog += min(chunk,
+                                       req.prompt_len - s.prefill_pos)
+        return {
+            "token_budget": self.scfg.token_budget,
+            "decode_tokens": len(self.sched.active_slots()),
+            "prefill_backlog": backlog,
+            "itl_p99_ms": (self._h_itl.percentile(99)
+                           if self._h_itl.count else None),
+        }
 
     def _admit(self, events: Dict[str, Any]) -> None:
         """Admission pass: free slots AND (paged) enough free pages for
@@ -641,14 +861,27 @@ class ServeEngine:
         tr = self._obs.tracer
         inflight = []
         for req in self.sched.pop_admissible(self.step_count, fits=fits):
-            slot = self.sched.admit(req)
+            if self.prefill_chunk:
+                # Chunked admission: the slot enters PREFILLING with a
+                # zero prompt cursor and a fresh dense scratch; chunks
+                # advance in _advance_prefills under the step budget
+                # (the first one this very step).
+                slot = self.sched.admit(req, state=PREFILLING)
+            else:
+                slot = self.sched.admit(req)
             tr.async_end("queued", req.rid)
             tr.async_begin("decode", req.rid, slot=slot.index)
             if self.kv_mode == "paged":
                 pages = self.blocks.assign(slot.index, req.prompt_len)
                 assert pages is not None, "admission fits() reserved these"
             self._slot_req[slot.index] = req
-            inflight.append((slot, req, self._prefill_slot(slot, req)))
+            if self.prefill_chunk:
+                self._scratch[slot.index] = init_cache(
+                    self.cfg, 1, self._fresh_len,
+                    enc_len=self.scfg.enc_len)
+            else:
+                inflight.append((slot, req,
+                                 self._prefill_slot(slot, req)))
             self.stats["admitted"] += 1
             events["admitted"].append(req.rid)
         for slot, req, tok0_dev in inflight:
@@ -659,6 +892,134 @@ class ServeEngine:
             self._emit(slot, tok0, events)
         self._note_kv_tokens(
             sum(s.length for s in self.sched.active_slots()))
+
+    def _advance_prefills(self, events: Dict[str, Any],
+                          budget: int) -> None:
+        """Spend the step's prefill token allowance on prompt chunks,
+        oldest admission first.  Decode claims one budget token per
+        active slot up front (decode never starves); what's left buys
+        chunks.  Unbudgeted (``budget == 0``) every PREFILLING slot
+        advances exactly one chunk — maximal interleave.  Forward
+        progress is guaranteed either way: the first chunk always runs,
+        so prefill can't starve behind a saturated decode."""
+        chunk = self.prefill_chunk
+        avail = None
+        if budget > 0:
+            avail = budget - len(self.sched.active_slots())
+        advanced = 0
+        for slot in self.sched.prefilling_slots():
+            while slot.state == PREFILLING:
+                if advanced and avail is not None and avail < chunk:
+                    return
+                self._prefill_chunk_step(slot, events)
+                advanced += 1
+                if avail is not None:
+                    avail -= chunk
+                if budget <= 0:
+                    break       # unbudgeted: one chunk per slot per step
+
+    def _prefill_chunk_step(self, slot: Slot, events: Dict[str, Any]
+                            ) -> None:
+        """Advance one slot's prefill by one chunk: run prompt tokens
+        [cursor, cursor+chunk) against the slot's dense scratch at the
+        cursor's offset (causal attention over the scratch's growing
+        prefix — the write offset and RoPE base are the cursor), then
+        (paged) scatter exactly that chunk's pages into the pool along
+        the slot's block-table row.  The final chunk yields the seed
+        token — greedy from the prompt's last-position logits, exactly
+        the monolithic path's — and flips the slot to DECODE so it
+        joins the current step's batch."""
+        req = self._slot_req[slot.index]
+        chunk, plen = self.prefill_chunk, req.prompt_len
+        c0 = slot.prefill_pos
+        take = min(chunk, plen - c0)
+        with self._obs.tracer.span("prefill_chunk", cat="engine",
+                                   rid=req.rid, lo=c0, take=take):
+            toks = np.zeros((1, chunk), np.int32)
+            toks[0, :take] = req.prompt[c0:c0 + take]
+            batch: Dict[str, jax.Array] = {"tokens": jnp.asarray(toks)}
+            if req.enc_embeds is not None:
+                batch["enc_embeds"] = jnp.asarray(req.enc_embeds)
+            logits, self._scratch[slot.index] = self._prefill_chunk_fn(
+                self.params, batch, self._scratch[slot.index],
+                jnp.asarray(c0, jnp.int32))
+            if self.kv_mode == "paged":
+                # Incremental page scatter: only this chunk's pages
+                # move.  Chunks are page-aligned, so the cursor sits on
+                # a page boundary; spans past the slot's table (or the
+                # scratch) clamp onto the null sink / last page — the
+                # sink absorbs what the clamp duplicates.
+                ps = self.pool.page_size
+                cpp = chunk // ps
+                p_lo = c0 // ps
+                mp = self._max_pages
+                ids = np.full((cpp,), self.pool.num_pages, np.int32)
+                seg = self.blocks.table[slot.index][p_lo:p_lo + cpp]
+                ids[:seg.size] = seg
+                src = np.clip(np.arange(p_lo, p_lo + cpp), 0, mp - 1) \
+                    .astype(np.int32)
+                self.caches = self._insert_chunk(
+                    self.caches, self._scratch[slot.index],
+                    jnp.asarray(ids), jnp.asarray(src))
+            self.stats["prefill_chunks"] += 1
+            self._c_chunks.inc()
+        slot.prefill_pos = c0 + take
+        if slot.prefill_pos < plen:
+            return
+        # Last chunk: dense mode inserts the whole scratch row (KV and
+        # all — same leak-free slot replacement as monolithic); paged
+        # mode already scattered every page.  Seed token, then DECODE.
+        if self.kv_mode != "paged":
+            self.caches = self._insert(
+                self.caches, self._scratch[slot.index],
+                jnp.asarray(slot.index, jnp.int32))
+        self._scratch.pop(slot.index, None)
+        tok0 = int(np.asarray(jnp.argmax(logits[0, take - 1])))
+        slot.state = DECODE
+        slot.length = plen
+        self.stats["prefills"] += 1
+        self._tok[slot.index] = tok0
+        self._emit(slot, tok0, events)
+
+    def cancel(self, rid: int) -> bool:
+        """Drop a request wherever it is — queued, mid chunked-prefill,
+        or mid-decode — releasing its slot and (paged) its pages the
+        same step, so a reclaim admission pass can reuse them before
+        the next decode.  Partial output is discarded.  Safe to call
+        from an ``on_token`` stream callback (including the stream's
+        own).  Returns False when ``rid`` is unknown or already
+        finished (finished results stay retrievable via
+        :meth:`result`)."""
+        self._check_open("cancel")
+        tr = self._obs.tracer
+        req = self.sched.cancel(rid)
+        if req is not None:                      # still queued
+            self._runnable_at.pop(rid, None)
+            self._on_token.pop(rid, None)
+            self.stats["cancelled"] += 1
+            self._cancel_log.append(rid)
+            tr.async_end("queued", rid)
+            tr.async_end("request", rid, cancelled=True)
+            return True
+        for slot in self.sched.slots:
+            if slot.rid == rid and slot.state in (DECODE, PREFILLING):
+                self._out.pop(rid, None)
+                self._scratch.pop(slot.index, None)
+                self._slot_req.pop(slot.index, None)
+                if self.kv_mode == "paged":
+                    # Same-step reclaim, exactly like EOS/completion.
+                    self.blocks.release(slot.index)
+                self.sched.release(slot)
+                self._runnable_at.pop(rid, None)
+                self._last_emit.pop(rid, None)
+                self._on_token.pop(rid, None)
+                self.stats["cancelled"] += 1
+                self._cancel_log.append(rid)
+                tr.instant("cancel", cat="engine", rid=rid)
+                tr.async_end("decode", rid)
+                tr.async_end("request", rid, cancelled=True)
+                return True
+        return False
 
     def _grow_pages(self, events: Dict[str, List[int]]) -> None:
         """Before a paged decode, every active slot needs a table entry
@@ -686,6 +1047,7 @@ class ServeEngine:
         stream on re-admission)."""
         rid = slot.rid
         self._out.pop(rid, None)
+        self._last_emit.pop(rid, None)
         self.blocks.release(slot.index)
         req = self._slot_req.pop(slot.index)
         self.sched.release(slot)
@@ -714,26 +1076,41 @@ class ServeEngine:
 
     def _emit(self, slot: Slot, tok: int, events: Dict[str, Any]
               ) -> None:
-        self._out.setdefault(slot.rid, []).append(int(tok))
+        rid = slot.rid
+        self._out.setdefault(rid, []).append(int(tok))
         slot.generated += 1
         self._c_tokens.inc()
-        t0 = self._runnable_at.pop(slot.rid, None)
+        now = time.perf_counter()
+        t0 = self._runnable_at.pop(rid, None)
         if t0 is not None:
             # First token since the request became runnable (or since
             # its last preemption): this IS the TTFT sample.
-            ttft_ms = (time.perf_counter() - t0) * 1e3
+            ttft_ms = (now - t0) * 1e3
             self._h_ttft.observe(ttft_ms)
-            events["ttft_ms"][slot.rid] = ttft_ms
+            events["ttft_ms"][rid] = ttft_ms
+        else:
+            prev = self._last_emit.get(rid)
+            if prev is not None:
+                # Inter-token latency is what the *stream* sees: the
+                # wall-clock gap since this request's previous token —
+                # so a monolithic neighbor's prefill blowing up a step
+                # shows here, where per-step decode timing would hide
+                # it.  First tokens are TTFT, never ITL.
+                gap_ms = (now - prev) * 1e3
+                self._h_itl.observe(gap_ms)
+                events["itl_ms"][rid] = gap_ms
+        self._last_emit[rid] = now
         eos = (self.scfg.eos_id is not None
                and int(tok) == int(self.scfg.eos_id))
         if eos:
             self.stats["eos_exits"] += 1
-        if slot.generated >= slot.max_new or eos:
-            rid = slot.rid
+        done = slot.generated >= slot.max_new or eos
+        if done:
             self._finished[rid] = np.asarray(self._out.pop(rid), np.int32)
             self.stats["finished"] += 1
             events["finished"].append(rid)
             self._slot_req.pop(slot.index, None)
+            self._last_emit.pop(rid, None)
             if self.kv_mode == "paged":
                 # Immediate reclaim: the slot's pages return to the pool
                 # the step the request ends, not when the slot refills.
@@ -742,6 +1119,12 @@ class ServeEngine:
             tr = self._obs.tracer
             tr.async_end("decode", rid)
             tr.async_end("request", rid, tokens=slot.generated, eos=eos)
+        cb = (self._on_token.pop(rid, None) if done
+              else self._on_token.get(rid))
+        if cb is not None:
+            # Streamed to the caller the moment the step produced it;
+            # the callback may cancel() any stream, including this one.
+            cb(rid, int(tok), done)
 
     def _prefill_slot(self, slot: Slot, req: Request) -> jax.Array:
         """Dispatch one admission's prefill into its slot: pad the

@@ -11,14 +11,26 @@ so every cache row stays busy.
 Slot lifecycle::
 
     FREE ──admit()──► PREFILL ──(same step)──► DECODE ──release()──► FREE
-      ▲                                                                │
+      ▲       │                                   ▲                    │
+      │       └─admit(state=PREFILLING)─► PREFILLING                   │
+      │                  │   ▲        │  (chunked: prefill_pos         │
+      │                  └───┘        │   advances one chunk/step)     │
+      │              chunk scattered  └──────── last chunk ────────────┤
       └────────────────────── slot reused ◄────────────────────────────┘
 
 ``PREFILL`` is transient: the engine prefills an admission and joins it
 to the very next decode step, so a newly admitted request *shares* that
-step with every older in-flight request.  The scheduler is pure host
-bookkeeping — it never touches jax — which keeps admission decisions
-out of the compiled hot path.
+step with every older in-flight request.  ``PREFILLING`` is the chunked
+variant and *persists across steps*: the slot carries a prompt cursor
+(``prefill_pos``) and joins decode only once the cursor reaches the
+prompt end.  The scheduler is pure host bookkeeping — it never touches
+jax — which keeps admission decisions out of the compiled hot path.
+
+Admission is delegated to a pluggable :class:`Policy`.  ``fifo``
+reproduces the historical hardcoded scan bit-for-bit; ``latency``
+defers admission while the decode token budget is saturated (or the
+measured inter-token p99 is above target), trading TTFT for in-flight
+stream latency.
 
 >>> s = Scheduler(2)
 >>> s.submit(Request(rid=0, prompt_len=4, max_new=2))
@@ -34,15 +46,18 @@ out of the compiled hot path.
 ('free', 2, False)
 >>> s.pop_admissible(step=5)[0].rid and s.done()
 True
+>>> Scheduler(2, policy="latency").policy.name
+'latency'
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Union
 
 FREE = "free"
 PREFILL = "prefill"
+PREFILLING = "prefilling"   # chunked prefill in flight; prefill_pos < prompt
 DECODE = "decode"
 
 
@@ -67,7 +82,8 @@ class Request:
 class Slot:
     """Per-slot state surviving across engine steps: which request the
     slot holds, how many KV rows of the persistent cache are valid
-    (``length``), and how many tokens it has produced."""
+    (``length``), how many tokens it has produced, and — while chunked
+    prefill is in flight — how far the prompt cursor has advanced."""
 
     index: int
     state: str = FREE
@@ -77,20 +93,137 @@ class Slot:
     max_new: int = 0
     admit_seq: int = -1         # global admission order (preemption picks
                                 # the youngest — the largest admit_seq)
+    prefill_pos: int = 0        # prompt tokens already prefilled (chunked)
+
+
+# -- admission policies ------------------------------------------------------
+
+
+@dataclasses.dataclass
+class AdmissionView:
+    """Read-only picture a :class:`Policy` decides from: the arrived
+    queue, the step counter, free-slot headroom, the engine's capacity
+    gate, and engine-published load signals (token budget, in-flight
+    decode tokens, measured inter-token p99, ...)."""
+
+    queue: List[Request]
+    step: int
+    free_slots: int
+    fits: Optional[Callable[[Request], bool]] = None
+    signals: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+
+class Policy:
+    """Admission policy protocol.  ``select`` returns the FIFO-ordered
+    sublist of ``view.queue`` to admit this step; it must never reorder
+    or invent requests — the scheduler pops exactly what it returns."""
+
+    name = "base"
+
+    def select(self, view: AdmissionView) -> List[Request]:
+        raise NotImplementedError
+
+
+class FifoPolicy(Policy):
+    """The historical hardcoded scan, preserved bit-for-bit: arrived
+    requests in submission order, capped by free slots, stopping at the
+    first capacity rejection (strictly FIFO — a small later request can
+    never starve a large earlier one)."""
+
+    name = "fifo"
+
+    def select(self, view: AdmissionView) -> List[Request]:
+        out: List[Request] = []
+        for r in view.queue:
+            if r.arrival > view.step:
+                continue
+            if len(out) >= view.free_slots:
+                break
+            if view.fits is not None and not view.fits(r):
+                break
+            out.append(r)
+        return out
+
+
+class LatencyPolicy(FifoPolicy):
+    """Defer admission while decode is saturated.  Two signals gate the
+    FIFO scan wholesale (admitting nothing this step):
+
+    - the step's token budget is already consumed by in-flight decode
+      plus pending prefill chunks (``decode_tokens + prefill_backlog >=
+      token_budget``), so a new prompt's chunks could only displace
+      in-flight tokens; or
+    - the measured ``serve.inter_token_ms`` p99 is above
+      ``target_p99_ms`` (when set), i.e. streams are already missing
+      their SLO.
+
+    Deferral trades time-to-first-token for inter-token latency of the
+    streams already running; FIFO order among deferred requests is kept.
+    """
+
+    name = "latency"
+
+    def __init__(self, target_p99_ms: Optional[float] = None):
+        self.target_p99_ms = target_p99_ms
+
+    def select(self, view: AdmissionView) -> List[Request]:
+        sig = view.signals
+        budget = int(sig.get("token_budget") or 0)
+        if budget > 0:
+            load = int(sig.get("decode_tokens") or 0) \
+                + int(sig.get("prefill_backlog") or 0)
+            if load >= budget:
+                return []
+        p99 = sig.get("itl_p99_ms")
+        if (self.target_p99_ms is not None and p99 is not None
+                and p99 > self.target_p99_ms):
+            return []
+        return super().select(view)
+
+
+POLICIES: Dict[str, Callable[[], Policy]] = {
+    "fifo": FifoPolicy,
+    "latency": LatencyPolicy,
+}
+
+
+def register_policy(name: str, factory: Callable[[], Policy]) -> None:
+    """Make ``Scheduler(policy=name)`` resolve to ``factory()`` — the
+    extension point for out-of-tree policies."""
+    POLICIES[name] = factory
+
+
+def make_policy(policy: Union[str, Policy, None]) -> Policy:
+    if policy is None:
+        return FifoPolicy()
+    if isinstance(policy, Policy):
+        return policy
+    try:
+        return POLICIES[policy]()
+    except KeyError:
+        raise ValueError(f"unknown scheduler policy {policy!r} "
+                         f"(have: {sorted(POLICIES)})") from None
 
 
 class Scheduler:
-    """FIFO admission of queued requests into free slots.
+    """Policy-driven admission of queued requests into free slots.
 
-    Requests become admissible once ``arrival <= step``; among
-    admissible requests, submission order wins (FIFO — no starvation).
+    Requests become admissible once ``arrival <= step``; which arrived
+    requests are admitted each step is the :class:`Policy`'s call (the
+    default ``fifo`` admits in submission order — no starvation).
     """
 
-    def __init__(self, n_slots: int, registry=None):
+    def __init__(self, n_slots: int,
+                 policy: Union[str, Policy, None] = "fifo",
+                 registry=None):
         if n_slots < 1:
             raise ValueError(f"need at least one slot, got {n_slots}")
         self.slots: List[Slot] = [Slot(index=i) for i in range(n_slots)]
         self.queue: List[Request] = []
+        self.policy = make_policy(policy)
+        # Engine-published load signals the policy reads (token budget,
+        # decode tokens in flight, measured p99, ...).
+        self.signals: Callable[[], Dict[str, Any]] = dict
         self._admit_seq = 0
         # Optional obs registry (repro.obs.metrics.Registry); the engine
         # passes the process bundle's, direct constructions stay silent.
@@ -126,26 +259,27 @@ class Scheduler:
             self._c_requeued.inc()
         self._sample_depth()
 
+    def cancel(self, rid: int) -> Optional[Request]:
+        """Drop a still-queued request; returns it, or None if ``rid``
+        is not waiting (already admitted, finished, or unknown)."""
+        for r in self.queue:
+            if r.rid == rid:
+                self.queue.remove(r)
+                self._sample_depth()
+                return r
+        return None
+
     def admissible(self, step: int,
                    fits: Optional[Callable[[Request], bool]] = None
                    ) -> List[Request]:
-        """Arrived requests that would fit in the currently free slots
-        (FIFO prefix — does not pop).  ``fits`` adds a capacity gate
-        beyond slots (the paged engine passes a free-page check that
-        reserves cumulatively): the scan stops at the first arrived
-        request it rejects — strictly FIFO, so a small later request
-        can never starve a large earlier one."""
-        free = self.free_slots()
-        out: List[Request] = []
-        for r in self.queue:
-            if r.arrival > step:
-                continue
-            if len(out) >= free:
-                break
-            if fits is not None and not fits(r):
-                break
-            out.append(r)
-        return out
+        """Requests the policy selects for admission this step (does
+        not pop).  ``fits`` adds a capacity gate beyond slots (the
+        paged engine passes a free-page check that reserves
+        cumulatively)."""
+        view = AdmissionView(queue=self.queue, step=step,
+                             free_slots=self.free_slots(), fits=fits,
+                             signals=self.signals())
+        return self.policy.select(view)
 
     def pop_admissible(self, step: int,
                        fits: Optional[Callable[[Request], bool]] = None
@@ -166,17 +300,25 @@ class Scheduler:
     def active_slots(self) -> List[Slot]:
         return [s for s in self.slots if s.state == DECODE]
 
-    def admit(self, req: Request) -> Slot:
-        """Bind ``req`` to the lowest-index free slot.  The engine
-        prefills it immediately, so the slot lands in DECODE state."""
+    def prefilling_slots(self) -> List[Slot]:
+        """Slots mid chunked-prefill, oldest admission first."""
+        return sorted((s for s in self.slots if s.state == PREFILLING),
+                      key=lambda s: s.admit_seq)
+
+    def admit(self, req: Request, state: str = DECODE) -> Slot:
+        """Bind ``req`` to the lowest-index free slot.  By default the
+        engine prefills it immediately, so the slot lands in DECODE
+        state; chunked admission passes ``state=PREFILLING`` and the
+        slot's prompt cursor starts at zero."""
         for slot in self.slots:
             if slot.state == FREE:
-                slot.state = DECODE
+                slot.state = state
                 slot.rid = req.rid
-                slot.length = req.prompt_len
+                slot.length = req.prompt_len if state == DECODE else 0
                 slot.generated = 0
                 slot.max_new = req.max_new
                 slot.admit_seq = self._admit_seq
+                slot.prefill_pos = 0
                 self._admit_seq += 1
                 return slot
         raise RuntimeError("admit() with no free slot — call "
@@ -192,7 +334,9 @@ class Scheduler:
         slot.generated = 0
         slot.max_new = 0
         slot.admit_seq = -1
+        slot.prefill_pos = 0
 
     def done(self) -> bool:
         """True when nothing is queued and nothing is in flight."""
-        return not self.queue and not self.active_slots()
+        return not self.queue and not self.active_slots() \
+            and not any(s.state == PREFILLING for s in self.slots)

@@ -41,6 +41,13 @@ Schema history (see docs/TUNING.md for the full notes):
   discarded wholesale on load, per the invalidation policy above: a v5
   serve entry's timing was measured without the kv_dtype axis and must
   not silently win against candidates it never competed with.
+* **v7** — ``serve`` configs gain ``prefill_chunk``: the chunked-
+  prefill chunk size of the unified token-budgeted step loop (0 = the
+  monolithic per-admission prefill; N splits each prompt into N-token
+  page-aligned chunks interleaved with in-flight decode).  v6 files are
+  discarded wholesale on load — a v6 serve entry's us-per-token was
+  measured with prefill stalls the chunked candidates don't pay, so it
+  must not silently win against them.
 """
 
 from __future__ import annotations
@@ -51,7 +58,7 @@ import tempfile
 from pathlib import Path
 from typing import Any, Dict, Optional
 
-SCHEMA_VERSION = 6
+SCHEMA_VERSION = 7
 
 _ENV_VAR = "REPRO_TUNING_CACHE"
 

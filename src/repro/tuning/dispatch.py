@@ -214,9 +214,9 @@ def _serve_key(cfg, max_len: int, dt: str, backend: str, kind: str) -> str:
 
 def serve_config(cfg, max_len: int, dtype) -> ServeCandidate:
     """Best-known continuous-batching engine tunables for this
-    arch/workload (schema v6: slot count + paged-KV page size + page
-    kv_dtype), falling back to the analytic prior (8 slots / 32-token
-    pages, full-precision)."""
+    arch/workload (schema v7: slot count + paged-KV page size + page
+    kv_dtype + chunked-prefill chunk), falling back to the analytic
+    prior (8 slots / 32-token pages, full-precision, monolithic)."""
     dt = canonical_dtype(dtype)
     backend, kind = backend_fingerprint()
     key = _serve_key(cfg, max_len, dt, backend, kind)
@@ -258,6 +258,20 @@ def serve_kv_dtype(cfg, max_len: int, dtype) -> Optional[str]:
         return None
     tuned = serve_config(cfg, max_len, dtype).kv_dtype
     return tuned or None
+
+
+def serve_prefill_chunk(cfg, max_len: int, dtype) -> int:
+    """Best-known chunked-prefill chunk size for the unified step loop
+    (``ServeConfig.prefill_chunk = None`` hook).  Returns 0 —
+    monolithic, the historical behavior — unless a *measured* tuned
+    entry chose a chunked candidate: a cache miss must never reshape a
+    stream's latency profile.  Archs the chunked path cannot cover
+    (recurrent state / enc-dec cross cache) always get 0 — the engine
+    would bypass anyway."""
+    from repro.models.model import paged_eligible
+    if not paged_eligible(cfg):
+        return 0
+    return serve_config(cfg, max_len, dtype).prefill_chunk
 
 
 def warm_gemm_shapes(shapes: Sequence[Tuple[int, int, int]], dtype) -> int:
@@ -482,12 +496,13 @@ def tune_serve(cfg, *, max_len: int = 64, prompt_len: int = 8,
                stagger: int = 2, keep: int = 3, warmup: int = 0,
                reps: int = 1, force: bool = False,
                cache: Optional[TuningCache] = None) -> TuneResult:
-    """Tune the continuous-batching engine (schema v6 ``serve`` op:
-    slot count x paged-KV page size x page kv_dtype) for one model
-    config: each surviving candidate runs a full staggered-arrival
-    trace through ``ServeEngine`` — with the candidate's KV layout
-    live — and is scored on measured us-per-token (i.e. tokens/s),
-    with completeness as the numerics gate.  Quantized-page candidates
+    """Tune the continuous-batching engine (schema v7 ``serve`` op:
+    slot count x paged-KV page size x page kv_dtype x chunked-prefill
+    chunk) for one model config: each surviving candidate runs a full
+    staggered-arrival trace through ``ServeEngine`` — with the
+    candidate's KV layout and prefill chunking live — and is scored on
+    measured us-per-token (i.e. tokens/s), with completeness as the
+    numerics gate.  Quantized-page candidates
     are dropped up front for archs the page pool cannot cover (the
     engine would reject them — see ``ServeConfig.kv_dtype``).  ``cfg``
     is a ``ModelConfig`` (use the smoke config of an arch — the
@@ -503,7 +518,11 @@ def tune_serve(cfg, *, max_len: int = 64, prompt_len: int = 8,
         return hit
     space = DesignSpace.serve(max_len=max_len)
     if not paged_eligible(cfg):
-        space = [c for c in space if not c.kv_dtype]
+        # The engine bypasses quantized pages (error) and chunked
+        # prefill (silently, to monolithic) on these archs — chunked
+        # candidates would just re-measure their monolithic twin.
+        space = [c for c in space if not c.kv_dtype
+                 and not c.prefill_chunk]
     survivors = prior.prune_serve(space, max_len, keep=keep)
     return _measure_and_store(
         key, tc, survivors,

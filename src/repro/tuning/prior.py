@@ -259,7 +259,11 @@ def serve_score(c: ServeCandidate, max_len: int) -> Tuple:
     waste = (c.page_size / 2) if c.page_size else (max_len / 2)
     if c.kv_dtype == "int8":
         waste /= 2
-    return (round(thpt * 1e6), -waste, -c.slots)
+    # Chunked prefill (schema v7) trades a little dispatch overhead for
+    # inter-token tail latency — a win this throughput-modeled score
+    # cannot see.  Rank chunked candidates just below their monolithic
+    # twin so they are measured, and win only when actually faster.
+    return (round(thpt * 1e6), -waste, -c.slots, -c.prefill_chunk)
 
 
 def prune_serve(candidates: Sequence[ServeCandidate], max_len: int,
@@ -276,5 +280,7 @@ def analytic_serve(max_len: int) -> ServeCandidate:
     consulted when the engine runs ``kv="paged"``, so untuned *dense*
     behavior is unchanged).  ``kv_dtype`` stays "" — quantized pages
     change numerics and must be opted into (CLI / tuner measurement),
-    never silently enabled by a cache miss."""
+    never silently enabled by a cache miss.  ``prefill_chunk`` stays 0
+    for the same reason: chunking reshapes a stream's latency profile,
+    and a cache miss must never change behavior, only a measurement."""
     return ServeCandidate(slots=8, page_size=32)

@@ -265,11 +265,14 @@ def time_serve(cand: ServeCandidate, cfg, max_len: Optional[int] = None,
     # (schema v6, e.g. "int8") retypes the page pool — the engine
     # raises for archs that cannot honor it, which _measure_and_store
     # records as a failed trial rather than aborting the tune.
+    # prefill_chunk (schema v7) runs the unified chunked step loop;
+    # 0 keeps the monolithic per-admission prefill.
     engine = ServeEngine(cfg, params, ServeConfig(
         batch_slots=cand.slots, max_len=max_len, pretune=False,
         kv="paged" if cand.page_size > 0 else "dense",
         page_size=cand.page_size,
-        kv_dtype=cand.kv_dtype or None))
+        kv_dtype=cand.kv_dtype or None,
+        prefill_chunk=cand.prefill_chunk))
     rng = np.random.default_rng(0)
     prompts = rng.integers(0, cfg.vocab_size,
                            size=(n_req, prompt_len)).astype(np.int32)

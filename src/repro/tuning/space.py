@@ -106,17 +106,22 @@ class WkvCandidate:
 
 @dataclasses.dataclass(frozen=True)
 class ServeCandidate:
-    """Continuous-batching engine tunables (schema v6): ``slots`` is
+    """Continuous-batching engine tunables (schema v7): ``slots`` is
     how many requests decode per batched step; ``page_size`` is the
     paged-KV pool's tokens-per-page granularity (0 = dense per-slot
     max_len reservation — the pre-kvpool layout); ``kv_dtype`` is the
     page-pool storage dtype ("" keeps the model's cache dtype, "int8"
-    stores quantized pages with per-row scale rows — paged only).
-    Schema v5 lacked ``kv_dtype``; v4 lacked ``page_size``."""
+    stores quantized pages with per-row scale rows — paged only);
+    ``prefill_chunk`` is the unified step loop's chunk size (0 =
+    monolithic per-admission prefill, N = N-token prompt chunks
+    interleaved with decode — paged candidates keep chunks a page
+    multiple).  Schema v6 lacked ``prefill_chunk``; v5 ``kv_dtype``;
+    v4 ``page_size``."""
 
     slots: int
     page_size: int = 0
     kv_dtype: str = ""
+    prefill_chunk: int = 0
 
     def to_json(self) -> dict:
         return dataclasses.asdict(self)
@@ -125,7 +130,8 @@ class ServeCandidate:
     def from_json(cls, d: dict) -> "ServeCandidate":
         return cls(slots=int(d["slots"]),
                    page_size=int(d.get("page_size", 0)),
-                   kv_dtype=str(d.get("kv_dtype", "")))
+                   kv_dtype=str(d.get("kv_dtype", "")),
+                   prefill_chunk=int(d.get("prefill_chunk", 0)))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -261,6 +267,7 @@ class DesignSpace:
     SERVE_SLOTS: Sequence[int] = (1, 2, 4, 8, 16, 32)
     SERVE_PAGE_SIZES: Sequence[int] = (0, 16, 32, 64)   # 0 = dense KV
     SERVE_KV_DTYPES: Sequence[str] = ("", "int8")       # "" = cache dtype
+    SERVE_PREFILL_CHUNKS: Sequence[int] = (0, 16, 32)   # 0 = monolithic
 
     @classmethod
     def serve(cls, max_slots: int = 32,
@@ -268,29 +275,43 @@ class DesignSpace:
         """Slot counts (powers of two up to ``max_slots``) crossed with
         the paged-KV page size (0 keeps the dense layout; pages larger
         than the workload's max_len would hold a single partial page
-        and are excluded when ``max_len`` is given) and, for paged
-        layouts only, the page-pool kv_dtype (schema v6: "" keeps the
-        cache dtype, "int8" quantizes pages — the dense layout has no
-        page pool to retype, so page_size == 0 stays full-precision).
-        Always includes the engine's untuned default (8 slots, dense)
-        so tuning can never regress below the fallback.
+        and are excluded when ``max_len`` is given), the page-pool
+        kv_dtype for paged layouts only (schema v6: "" keeps the cache
+        dtype, "int8" quantizes pages — the dense layout has no page
+        pool to retype, so page_size == 0 stays full-precision), and
+        the chunked-prefill chunk size (schema v7: 0 = monolithic;
+        paged candidates only carry chunks that are a page multiple,
+        since the engine rounds up anyway — unaligned chunks would be
+        duplicate measurements; chunks at or beyond max_len collapse to
+        monolithic and are likewise excluded).  Always includes the
+        engine's untuned default (8 slots, dense, monolithic) so tuning
+        can never regress below the fallback.
 
         >>> [c.slots for c in DesignSpace.serve(max_slots=4)
-        ...  if c.page_size == 0]
+        ...  if c.page_size == 0 and c.prefill_chunk == 0]
         [1, 2, 4, 8]
         >>> sorted({c.page_size for c in DesignSpace.serve(max_len=24)})
         [0, 16, 32]
         >>> sorted({(c.page_size, c.kv_dtype)
         ...         for c in DesignSpace.serve(max_len=24)})
         [(0, ''), (16, ''), (16, 'int8'), (32, ''), (32, 'int8')]
+        >>> sorted({(c.page_size, c.prefill_chunk)
+        ...         for c in DesignSpace.serve(max_len=48)
+        ...         if c.kv_dtype == ''})      # doctest: +NORMALIZE_WHITESPACE
+        [(0, 0), (0, 16), (0, 32), (16, 0), (16, 16), (16, 32),
+         (32, 0), (32, 32), (64, 0)]
         """
         slots = {s for s in cls.SERVE_SLOTS if s <= max(max_slots, 1)}
         slots.add(8)
         pages = [p for p in cls.SERVE_PAGE_SIZES
                  if max_len <= 0 or p == 0 or p < 2 * max_len]
-        return [ServeCandidate(slots=s, page_size=p, kv_dtype=kd)
+        return [ServeCandidate(slots=s, page_size=p, kv_dtype=kd,
+                               prefill_chunk=pc)
                 for s in sorted(slots) for p in pages
-                for kd in cls.SERVE_KV_DTYPES if p or not kd]
+                for kd in cls.SERVE_KV_DTYPES if p or not kd
+                for pc in cls.SERVE_PREFILL_CHUNKS
+                if (pc == 0 or ((p == 0 or pc % p == 0)
+                                and (max_len <= 0 or pc < max_len)))]
 
     @classmethod
     def wkv(cls, t: int, n: int) -> List["WkvCandidate"]:

@@ -515,50 +515,64 @@ def test_paged_oversubscribes_dense_reservation():
 
 
 # ---------------------------------------------------------------------------
-# Tuner schema v6: page_size + kv_dtype dispatch
+# Tuner schema v7: page_size + kv_dtype + prefill_chunk dispatch
 # ---------------------------------------------------------------------------
 
 
-def test_serve_candidate_v6_roundtrip_and_dispatch():
+def test_serve_candidate_v7_roundtrip_and_dispatch():
     from repro.tuning import dispatch
     from repro.tuning.space import DesignSpace, ServeCandidate
-    c = ServeCandidate(slots=4, page_size=32, kv_dtype="int8")
+    c = ServeCandidate(slots=4, page_size=32, kv_dtype="int8",
+                       prefill_chunk=32)
     assert ServeCandidate.from_json(c.to_json()) == c
-    # v4/v5-era JSON (no page_size / no kv_dtype) still parses.
+    # v4/v5/v6-era JSON (progressively fewer axes) still parses.
     assert ServeCandidate.from_json({"slots": 8}).page_size == 0
     assert ServeCandidate.from_json({"slots": 8,
                                      "page_size": 16}).kv_dtype == ""
+    assert ServeCandidate.from_json(
+        {"slots": 8, "page_size": 16, "kv_dtype": ""}).prefill_chunk == 0
     space = DesignSpace.serve(max_len=64)
     assert {c.page_size for c in space} == {0, 16, 32, 64}
     assert {c.kv_dtype for c in space} == {"", "int8"}
+    assert {c.prefill_chunk for c in space} == {0, 16, 32}
     # int8 is a page-pool property: never crossed with the dense layout.
     assert not any(c.kv_dtype and c.page_size == 0 for c in space)
+    # Paged chunks are page-aligned; every chunk is below max_len.
+    assert all(c.prefill_chunk % c.page_size == 0 for c in space
+               if c.prefill_chunk and c.page_size)
+    assert all(c.prefill_chunk < 64 for c in space)
     # Analytic fallbacks: slots unchanged from v4, page granularity 32,
-    # kv_dtype never quantized by default (a miss must not change
-    # numerics).
+    # kv_dtype never quantized by default, prefill monolithic by
+    # default (a miss must not change numerics or reshape latency).
     assert dispatch.serve_slots(CFG, 64, "float32") == 8
     assert dispatch.serve_page_size(CFG, 64, "float32") == 32
     assert dispatch.serve_kv_dtype(CFG, 64, "float32") is None
-    # Archs the pool cannot cover never get a quantized dtype, tuned or
-    # not (their pages silently fall back to the dense layout).
+    assert dispatch.serve_prefill_chunk(CFG, 64, "float32") == 0
+    # Archs the pool cannot cover never get a quantized dtype or a
+    # chunked prefill, tuned or not (their pages silently fall back to
+    # the dense layout, chunking to monolithic).
     assert dispatch.serve_kv_dtype(C.get_smoke("rwkv6_3b"), 64,
                                    "float32") is None
+    assert dispatch.serve_prefill_chunk(C.get_smoke("rwkv6_3b"), 64,
+                                        "float32") == 0
 
 
-def test_schema_v6_discards_v5_serve_entries(tmp_path):
-    """A v5 cache file — even with a well-formed serve entry — must be
-    invalidated wholesale: its timing never competed against the
-    kv_dtype axis."""
+def test_schema_v7_discards_v6_serve_entries(tmp_path):
+    """A v6 cache file — even with a well-formed serve entry — must be
+    invalidated wholesale: its timing was measured with monolithic
+    prefill stalls the chunked candidates don't pay, so it never fairly
+    competed against the prefill_chunk axis."""
     import json
 
     from repro.tuning.cache import SCHEMA_VERSION, TuningCache, cache_key
-    assert SCHEMA_VERSION == 6
+    assert SCHEMA_VERSION == 7
     path = tmp_path / "tuning_cache.json"
     key = cache_key("serve", CFG.d_model, CFG.vocab_size, 64, "float32",
                     "cpu", "cpu", extra=f"arch{CFG.name}")
     path.write_text(json.dumps({
-        "schema": 5,
-        "entries": {key: {"config": {"slots": 16, "page_size": 64},
+        "schema": 6,
+        "entries": {key: {"config": {"slots": 16, "page_size": 64,
+                                     "kv_dtype": ""},
                           "us": 1.0}},
     }))
     tc = TuningCache(path).load()

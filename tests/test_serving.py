@@ -333,3 +333,274 @@ def test_prefill_buckets():
     assert _bucket_for(64, 64) == 64
     with pytest.raises(ValueError, match="exceeds"):
         _bucket_for(65, 64)
+
+
+# ---------------------------------------------------------------------------
+# Chunked prefill: bit-identity across chunk sizes / layouts / dtypes
+# ---------------------------------------------------------------------------
+
+# Prompt lengths chosen to hit every chunk-boundary shape at least once
+# across the drawn chunk sizes: chunk == page_size (8), a 1-token tail
+# (17 = 2*8+1, 33 = 2*16+1), chunk > prompt (64 > everything), and a
+# single-token prompt.
+_CHUNK_LENGTHS = (5, 17, 33, 1, 24)
+_CHUNK_MAX_NEW = (6, 4, 8, 5, 3)
+_CHUNK_PROMPTS = _prompts(_CHUNK_LENGTHS, seed=21)
+_CHUNK_REFS = {}
+
+
+def _chunked_outputs(chunk, kv, kv_dtype=None, budget=0, policy="fifo"):
+    """Replay the fixed staggered workload through a 4-slot engine with
+    the given chunking knobs; returns (per-request outputs, stats)."""
+    eng = ServeEngine(CFG, PARAMS, ServeConfig(
+        batch_slots=4, max_len=64, kv=kv, page_size=8,
+        kv_dtype=kv_dtype, prefill_chunk=chunk, token_budget=budget,
+        policy=policy))
+    try:
+        rids = [eng.submit(_CHUNK_PROMPTS[L], mn, arrival=i)
+                for i, (L, mn) in enumerate(zip(_CHUNK_LENGTHS,
+                                                _CHUNK_MAX_NEW))]
+        res = eng.drain()
+        stats = dict(eng.stats)
+    finally:
+        eng.close()
+    return [res[r] for r in rids], stats
+
+
+def _monolithic_ref(kv, kv_dtype=None):
+    key = (kv, kv_dtype)
+    if key not in _CHUNK_REFS:
+        outs, stats = _chunked_outputs(0, kv, kv_dtype)
+        assert stats["prefill_chunks"] == 0
+        _CHUNK_REFS[key] = outs
+    return _CHUNK_REFS[key]
+
+
+@given(st.tuples(
+    st.sampled_from((3, 8, 16, 64)),     # page-size, odd tails, > prompt
+    st.sampled_from(("dense", "paged")),
+    st.sampled_from((0, 12)),            # unbudgeted vs tight budget
+))
+@settings(max_examples=8, deadline=None)
+def test_chunked_prefill_bit_identical(draw):
+    """Chunked prefill must be invisible in the outputs: for greedy
+    decode, every request's token stream equals the monolithic run's
+    whatever the chunk size (page-aligned, 1-token tail, chunk larger
+    than the whole prompt), KV layout, or step token budget — chunking
+    changes *when* prompt KV is written, never what attention over it
+    computes.  (Paged mode rounds chunk 3 up to the 8-token page.)"""
+    chunk, kv, budget = draw
+    want = _monolithic_ref(kv)
+    got, stats = _chunked_outputs(chunk, kv, budget=budget)
+    assert stats["prefill_chunks"] > 0      # the chunked path really ran
+    for L, w, g in zip(_CHUNK_LENGTHS, want, got):
+        np.testing.assert_array_equal(
+            w, g, err_msg=f"chunk={chunk} kv={kv} budget={budget} "
+                          f"prompt_len={L} diverged from monolithic")
+
+
+def test_chunked_prefill_bit_identical_int8_pages():
+    """Same invariant through the quantized page pool: the int8 chunked
+    run must match the int8 monolithic run exactly (both quantize the
+    same K/V rows — per chunk vs per prompt — so even the quantization
+    noise is identical)."""
+    want = _monolithic_ref("paged", "int8")
+    for chunk, budget in ((8, 0), (16, 10)):
+        got, stats = _chunked_outputs(chunk, "paged", kv_dtype="int8",
+                                      budget=budget)
+        assert stats["prefill_chunks"] > 0
+        for L, w, g in zip(_CHUNK_LENGTHS, want, got):
+            np.testing.assert_array_equal(
+                w, g, err_msg=f"int8 chunk={chunk} budget={budget} "
+                              f"prompt_len={L}")
+
+
+def test_chunked_prefill_validation_and_rounding():
+    with pytest.raises(ValueError, match="prefill_chunk"):
+        ServeEngine(CFG, PARAMS, ServeConfig(batch_slots=1, max_len=32,
+                                             prefill_chunk=-2,
+                                             pretune=False))
+    eng = ServeEngine(CFG, PARAMS, ServeConfig(
+        batch_slots=1, max_len=32, kv="paged", page_size=8,
+        prefill_chunk=3, pretune=False))
+    try:
+        assert eng.prefill_chunk == 8       # rounded up to the page
+    finally:
+        eng.close()
+
+
+# ---------------------------------------------------------------------------
+# Cancellation: same-step reclaim, later streams unaffected
+# ---------------------------------------------------------------------------
+
+
+def test_cancel_reclaims_same_step_and_streams_unaffected():
+    """Cancelling a mid-decode request from its own stream callback
+    must free its slot *and* KV pages within the same engine step — the
+    queued request is admitted by that step's reclaim pass — and must
+    not perturb any other stream's tokens."""
+    prompts = _prompts((9, 7, 6), seed=31)
+    eng = ServeEngine(CFG, PARAMS, ServeConfig(batch_slots=2, max_len=64,
+                                               kv="paged", page_size=8))
+    try:
+        seen = []
+
+        def cb(rid, tok, done):
+            seen.append(tok)
+            if len(seen) == 3:
+                assert eng.cancel(rid)
+
+        ra = eng.submit(prompts[9], 12, on_token=cb)
+        rb = eng.submit(prompts[7], 8)
+        rc = eng.submit(prompts[6], 6)      # queued: both slots busy
+        cancel_ev = None
+        while not eng.sched.done():
+            ev = eng.step()
+            if ra in ev["cancelled"]:
+                assert cancel_ev is None
+                cancel_ev = ev
+        assert cancel_ev is not None and len(seen) == 3
+        # Same-step reuse: the queued request took the cancelled slot.
+        assert rc in cancel_ev["admitted"], \
+            "cancelled slot/pages not re-admitted in the same step"
+        assert eng.stats["cancelled"] == 1
+        res = eng.drain()
+        assert ra not in res                # cancelled: no result
+        # All pages returned once everything drained.
+        assert eng.pool.free_pages == eng.pool.num_pages
+    finally:
+        eng.close()
+    np.testing.assert_array_equal(
+        res[rb], _oneshot(CFG, PARAMS, prompts[7], 8),
+        err_msg="stream decoding beside the cancel diverged")
+    np.testing.assert_array_equal(
+        res[rc], _oneshot(CFG, PARAMS, prompts[6], 6),
+        err_msg="stream admitted into the cancelled slot diverged")
+
+
+def test_cancel_queued_and_unknown():
+    prompts = _prompts((4, 5), seed=33)
+    eng = ServeEngine(CFG, PARAMS, ServeConfig(batch_slots=1, max_len=64))
+    try:
+        ra = eng.submit(prompts[4], 4)
+        rb = eng.submit(prompts[5], 4)      # waits behind ra
+        assert eng.cancel(rb)               # still queued
+        assert not eng.cancel(10_000)       # unknown rid
+        res = eng.drain()
+        assert set(res) == {ra}
+        assert not eng.cancel(ra)           # already finished
+    finally:
+        eng.close()
+
+
+def test_cancel_mid_chunked_prefill_releases_scratch_and_pages():
+    """A request cancelled while its prompt is still PREFILLING (cursor
+    mid-prompt) must drop its dense scratch and give its pages back."""
+    prompts = _prompts((33, 6), seed=35)
+    eng = ServeEngine(CFG, PARAMS, ServeConfig(batch_slots=1, max_len=64,
+                                               kv="paged", page_size=8,
+                                               prefill_chunk=8))
+    try:
+        ra = eng.submit(prompts[33], 4)
+        rb = eng.submit(prompts[6], 4)
+        ev = eng.step()                     # first chunk only: 8 < 33
+        assert ra not in ev["finished"] and not ev["decoded"]
+        assert eng.cancel(ra)
+        assert not eng._scratch             # scratch freed immediately
+        res = eng.drain()
+        assert set(res) == {rb}
+        assert eng.pool.free_pages == eng.pool.num_pages
+    finally:
+        eng.close()
+    np.testing.assert_array_equal(res[rb],
+                                  _oneshot(CFG, PARAMS, prompts[6], 4))
+
+
+# ---------------------------------------------------------------------------
+# Admission passes: freed capacity is reusable the same step
+# ---------------------------------------------------------------------------
+
+
+def test_freed_slot_readmitted_same_step():
+    """Regression for the post-decode reclaim pass (`_admission_pass`):
+    the step in which a request finishes must admit the next queued
+    request — its freed slot and pages may not idle a step."""
+    prompts = _prompts((4, 5), seed=41)
+    eng = ServeEngine(CFG, PARAMS, ServeConfig(batch_slots=1, max_len=64,
+                                               kv="paged", page_size=8))
+    try:
+        ra = eng.submit(prompts[4], 3)
+        rb = eng.submit(prompts[5], 3)
+        finish_ev = None
+        while not eng.sched.done():
+            ev = eng.step()
+            if ra in ev["finished"]:
+                finish_ev = ev
+        assert finish_ev is not None
+        assert rb in finish_ev["admitted"], \
+            "freed slot/pages not re-admitted in the finishing step"
+        res = eng.drain()
+    finally:
+        eng.close()
+    np.testing.assert_array_equal(res[rb],
+                                  _oneshot(CFG, PARAMS, prompts[5], 3))
+
+
+# ---------------------------------------------------------------------------
+# Scheduler policies
+# ---------------------------------------------------------------------------
+
+
+def test_policy_registry_and_unknown_name():
+    from repro.serving.scheduler import (FifoPolicy, LatencyPolicy,
+                                         make_policy, register_policy)
+    assert isinstance(make_policy(None), FifoPolicy)
+    assert isinstance(make_policy("latency"), LatencyPolicy)
+    custom = FifoPolicy()
+    assert make_policy(custom) is custom
+    with pytest.raises(ValueError, match="unknown scheduler policy"):
+        make_policy("nope")
+    register_policy("test-fifo2", FifoPolicy)
+    try:
+        assert Scheduler(1, policy="test-fifo2").policy.name == "fifo"
+    finally:
+        from repro.serving.scheduler import POLICIES
+        POLICIES.pop("test-fifo2")
+
+
+def test_latency_policy_defers_under_pressure_else_fifo():
+    """The latency policy admits exactly what FIFO would — until the
+    engine-published signals show decode saturation (budgeted) or a
+    blown inter-token p99, when it admits nothing."""
+    from repro.serving.scheduler import LatencyPolicy
+    s = Scheduler(2, policy="latency")
+    for rid in (0, 1, 2):
+        s.submit(Request(rid=rid, prompt_len=4, max_new=2))
+    # No pressure: identical to the FIFO scan (2 free slots -> 2 picks).
+    s.signals = lambda: {"token_budget": 0, "decode_tokens": 4,
+                         "prefill_backlog": 9, "itl_p99_ms": None}
+    assert [r.rid for r in s.admissible(step=0)] == [0, 1]
+    # Budget saturated by in-flight decode + pending chunks: defer.
+    s.signals = lambda: {"token_budget": 8, "decode_tokens": 4,
+                         "prefill_backlog": 4, "itl_p99_ms": None}
+    assert s.admissible(step=0) == []
+    # Headroom again: back to FIFO.
+    s.signals = lambda: {"token_budget": 8, "decode_tokens": 2,
+                         "prefill_backlog": 0, "itl_p99_ms": None}
+    assert [r.rid for r in s.admissible(step=0)] == [0, 1]
+    # p99 over target (explicit target): defer.
+    s.policy = LatencyPolicy(target_p99_ms=5.0)
+    s.signals = lambda: {"token_budget": 0, "decode_tokens": 0,
+                         "prefill_backlog": 0, "itl_p99_ms": 7.5}
+    assert s.admissible(step=0) == []
+
+
+def test_latency_policy_engine_run_completes_bit_identical():
+    """End to end under the latency policy + tight budget: deferral
+    changes admission timing only — every request completes with its
+    monolithic-FIFO tokens."""
+    want = _monolithic_ref("paged")
+    got, stats = _chunked_outputs(8, "paged", budget=6, policy="latency")
+    assert stats["finished"] == len(_CHUNK_LENGTHS)
+    for L, w, g in zip(_CHUNK_LENGTHS, want, got):
+        np.testing.assert_array_equal(w, g, err_msg=f"prompt_len={L}")
