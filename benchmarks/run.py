@@ -22,8 +22,11 @@ scaling level, mirroring how GAMA evaluates single AIE -> pack -> array:
   dense run) on the same ragged staggered-arrival trace, reporting
   tokens/s, p50/p99 per-token latency and the KV footprint of the
   layout that actually ran (dense reservation vs live page high-water
-  mark), plus the schema-v5 ``serve`` tuning pass (batch_slots x
-  page_size).
+  mark), the prefix-cache row on the committed shared-prompt trace
+  (``serve.prefix.s4``: bit-identity vs uncached for f32/int8 pages,
+  hit rate, <= 0.6x page high-water), plus the schema-v8 ``serve``
+  tuning pass (batch_slots x page_size x kv_dtype x prefill_chunk x
+  prefix_cache).
 
 Run: PYTHONPATH=src python -m benchmarks.run
                               [--level single|pack|array|serve]
@@ -61,11 +64,22 @@ def timed(fn: Callable, reps: int = 3) -> Tuple[float, object]:
 
 ROWS: List[Dict[str, object]] = []
 
+# Deterministic quality figures (miss rates, footprint ratios — scalars
+# where *growth* is a regression, unlike the noisy timed rows).  --json
+# writes them as a schema-1 metrics snapshot next to the rows file so
+# ``tools/bench_compare.py --metrics`` can gate them directly.
+GAUGES: Dict[str, float] = {}
+
 
 def emit(name: str, us: float, derived: str) -> None:
     ROWS.append({"name": name, "us_per_call": round(us, 1),
                  "derived": derived})
     print(f"{name},{us:.1f},{derived}")
+
+
+def emit_gauge(name: str, value: float) -> None:
+    GAUGES[name] = float(value)
+    print(f"# gauge {name}={value:.4f}")
 
 
 def _gemm_eff(m: int, k: int, n: int, us: float,
@@ -522,13 +536,63 @@ def bench_serve_trace() -> None:
              f"eff={serve_efficiency(cfg, crep['tok_s']):.2e}")
     finally:
         chunked.close()
+    # Prefix caching on the committed shared-system-prompt trace
+    # (shared16.jsonl — 16 requests over 4 seeded system prompts): the
+    # cached run must be greedy-bit-identical to the uncached paged run
+    # (f32 *and* int8 pages) while the live-page high-water comes in at
+    # <= 0.6x — pool bytes multiplied by sharing, not by capacity.  The
+    # miss-rate and hwm-ratio figures are deterministic (seeded trace,
+    # greedy decode), so they export as gauges the --metrics gate holds
+    # to ~1.0x run over run.
+    from repro.launch.serve import load_trace, resolve_trace_path
+    strace = load_trace(resolve_trace_path("shared16"), cfg.vocab_size)
+    smax_len = max(len(t["prompt"]) + t["max_new"] for t in strace) + 8
+    srep = {}
+    for kv_dtype in (None, "int8"):
+        runs = {}
+        for cached in (False, True):
+            eng = ServeEngine(cfg, params, ServeConfig(
+                batch_slots=slots, max_len=smax_len, kv="paged",
+                page_size=16, kv_dtype=kv_dtype, prefix_cache=cached))
+            try:
+                run_trace(eng, strace, log=None)    # compile warmup
+                r = run_trace(eng, strace, log=None)
+                r["pages_hwm"] = eng.pool.high_water
+                runs[cached] = r
+            finally:
+                eng.close()
+        for tid, toks in runs[False]["results"].items():
+            np.testing.assert_array_equal(
+                toks, runs[True]["results"][tid],
+                err_msg=f"prefix-cached diverged from uncached "
+                        f"(kv_dtype={kv_dtype}, trace id {tid})")
+        ratio = runs[True]["pages_hwm"] / runs[False]["pages_hwm"]
+        assert ratio <= 0.6, \
+            (f"prefix sharing saved too little: pages_hwm "
+             f"{runs[True]['pages_hwm']} vs {runs[False]['pages_hwm']} "
+             f"uncached (kv_dtype={kv_dtype})")
+        assert runs[True]["prefix_hit_rate"] > 0, "no prefix hits"
+        srep[kv_dtype] = runs
+    f32c, f32u = srep[None][True], srep[None][False]
+    emit("serve.prefix.s4", f32c["wall_s"] * 1e6 / f32c["tokens"],
+         f"tok_s={f32c['tok_s']:.1f} trace=shared16 page=16 "
+         f"hit_rate={f32c['prefix_hit_rate']:.2f} "
+         f"pages_hwm={f32c['pages_hwm']} "
+         f"uncached_hwm={f32u['pages_hwm']} "
+         f"cow={f32c['cow_copies']} "
+         f"int8_identical=yes "
+         f"eff={serve_efficiency(cfg, f32c['tok_s']):.2e}")
+    emit_gauge("serve.prefix.miss_rate", 1.0 - f32c["prefix_hit_rate"])
+    emit_gauge("serve.prefix.pages_hwm_ratio",
+               f32c["pages_hwm"] / f32u["pages_hwm"])
 
 
 def bench_serve_tuning() -> None:
-    """The schema-v7 serve tunable: measure (batch_slots, page_size,
-    kv_dtype, prefill_chunk) candidates end to end — dense, paged,
-    int8-paged and chunked-prefill variants compete on the same trace
-    — and persist the winner."""
+    """The schema-v8 serve tunable: measure (batch_slots, page_size,
+    kv_dtype, prefill_chunk, prefix_cache) candidates end to end —
+    dense, paged, int8-paged, chunked-prefill and prefix-cached
+    variants compete on the same shared-prefix trace — and persist the
+    winner."""
     from repro import configs as C
     from repro.tuning import dispatch
     cfg = C.get_smoke("smollm_360m")
@@ -664,6 +728,18 @@ def main() -> None:
             json.dump({"schema": 1, "level": args.level, "rows": ROWS},
                       f, indent=1)
         print(f"# wrote {len(ROWS)} rows to {args.json}")
+        if GAUGES:
+            # Deterministic quality figures as a schema-1 metrics
+            # snapshot (see repro.obs.export) so bench_compare.py
+            # --metrics gates them at ~1.0x, unlike the noisy rows.
+            mpath = os.path.splitext(args.json)[0] + "_metrics.json"
+            snap = {"schema": 1, "counters": {},
+                    "gauges": {k: {"value": v, "high_water": v}
+                               for k, v in GAUGES.items()},
+                    "histograms": {}}
+            with open(mpath, "w") as f:
+                json.dump(snap, f, indent=1)
+            print(f"# wrote {len(GAUGES)} gauges to {mpath}")
 
 
 if __name__ == "__main__":

@@ -38,7 +38,14 @@ chunked-vs-monolithic check too).  ``--kv paged`` serves through the
 and logs page-reclaim/preemption events plus the pool high-water mark;
 ``--kv-dtype int8`` stores the pages quantized (per-row scales,
 dequantized inside the fused decode kernel) at roughly a third of the
-f32 KV bytes.  ``--prefill-chunk N`` splits each admitted prompt into
+f32 KV bytes.  ``--prefix-cache`` (paged only) shares page-aligned
+prompt prefixes across requests through a refcounted radix tree with
+copy-on-write — ``--arrivals shared`` synthesizes the matching
+shared-system-prompt workload (``--groups`` distinct system prompts,
+group-blocked step arrivals; the committed ``shared16.jsonl`` trace) —
+bit-identical to uncached runs, with the pool high-water dropping by
+roughly the shared fraction.  ``--prefill-chunk N`` splits each
+admitted prompt into
 N-token chunks interleaved with in-flight decode (0 = monolithic,
 -1 = ask the tuner); ``--token-budget``/``--policy`` control the
 unified step loop's budget and admission policy.
@@ -57,9 +64,23 @@ from typing import Callable, Dict, List, Optional
 import numpy as np
 
 
+def shared_prefix_tokens(group: int, prefix_len: int, vocab_size: int,
+                         seed: int = 0) -> np.ndarray:
+    """The system-prompt tokens of one share group — seeded per *group*
+    (offset by 1000 so group rngs never collide with per-id suffix
+    rngs), so every request in the group reloads the identical
+    prefix."""
+    return np.random.default_rng(seed + 1000 + int(group)).integers(
+        0, vocab_size, size=(int(prefix_len),)).astype(np.int32)
+
+
 def load_trace(path: str, vocab_size: int, seed: int = 0) -> List[dict]:
     """Parse a JSONL trace; synthesize prompt tokens where only
-    ``prompt_len`` is given (deterministically, per request id)."""
+    ``prompt_len`` is given (deterministically, per request id).
+    Records carrying ``group`` + ``prefix_len`` are *shared-prefix*
+    requests: the first ``prefix_len`` tokens come from the group's rng
+    (identical across the group — the system prompt), the remaining
+    ``prompt_len - prefix_len`` from the per-id rng."""
     out = []
     with open(path) as f:
         for line in f:
@@ -71,13 +92,25 @@ def load_trace(path: str, vocab_size: int, seed: int = 0) -> List[dict]:
                 prompt = np.asarray(rec["prompt"], np.int32)
             else:
                 rng = np.random.default_rng(seed + int(rec["id"]))
-                prompt = rng.integers(0, vocab_size,
-                                      size=(int(rec["prompt_len"]),)
-                                      ).astype(np.int32)
+                plen = int(rec["prompt_len"])
+                if "group" in rec:
+                    pfx = shared_prefix_tokens(rec["group"],
+                                               rec.get("prefix_len", 0),
+                                               vocab_size, seed)
+                    sfx = rng.integers(0, vocab_size,
+                                       size=(plen - len(pfx),)
+                                       ).astype(np.int32)
+                    prompt = np.concatenate([pfx, sfx])
+                else:
+                    prompt = rng.integers(0, vocab_size, size=(plen,)
+                                          ).astype(np.int32)
             item = {"id": int(rec["id"]),
                     "arrival": int(rec.get("arrival", 0)),
                     "prompt": prompt,
                     "max_new": int(rec["max_new"])}
+            if "group" in rec:
+                item["group"] = int(rec["group"])
+                item["prefix_len"] = int(rec.get("prefix_len", 0))
             if "arrival_s" in rec:
                 item["arrival_s"] = float(rec["arrival_s"])
             if "cancel_after" in rec:
@@ -175,9 +208,51 @@ def bursty_trace(requests: int, prompt_len: int, max_new: int,
     return out
 
 
+def shared_trace(requests: int, prompt_len: int, max_new: int,
+                 groups: int, stagger: int, vocab_size: int,
+                 seed: int = 0) -> List[dict]:
+    """Shared-system-prompt trace: ``requests`` requests split over
+    ``groups`` share groups, each group reusing one seeded system
+    prompt of ``3 * prompt_len // 4`` tokens followed by a per-request
+    suffix of ``prompt_len//8 .. prompt_len//4`` tokens (the long-
+    system-prompt / short-question shape of production shared
+    traffic).  Arrivals are
+    *group-blocked* (all of group 0, then group 1, ...) and staggered
+    one request per ``stagger`` steps, so a group's first request
+    finishes prefilling — and populates the radix tree — before its
+    siblings are admitted: the workload where prefix caching pays.
+    Consecutive groups are spaced an extra ``max_new`` steps apart so
+    one group's decode mostly drains before the next group's
+    admissions: its prefix pages then drop to cache-idle residency
+    (reclaimable, uncounted by the ``pages_in_use`` high-water), which
+    is what lets sharing cut the pool high-water by roughly the shared
+    fraction rather than merely deduplicating concurrent prompts.
+    Prompts use the group/per-id rngs of :func:`load_trace`, so a
+    ``--dump-trace`` file (storing only group/prefix_len/prompt_len)
+    reloads to bit-identical prompts."""
+    rng = np.random.default_rng(seed)
+    prefix_len = max(1, (3 * prompt_len) // 4)
+    out = []
+    for i in range(requests):
+        g = i * groups // max(1, requests)     # group-blocked order
+        pfx = shared_prefix_tokens(g, prefix_len, vocab_size, seed)
+        slen = int(rng.integers(max(1, prompt_len // 8),
+                                max(2, prompt_len // 4) + 1))
+        sfx = np.random.default_rng(seed + i).integers(
+            0, vocab_size, size=(slen,)).astype(np.int32)
+        out.append({"id": i, "arrival": i * stagger + g * max_new,
+                    "group": g,
+                    "prefix_len": prefix_len,
+                    "prompt": np.concatenate([pfx, sfx]),
+                    "max_new": max_new})
+    return out
+
+
 def dump_trace(path: str, trace: List[dict]) -> None:
     """Write ``trace`` as JSONL, storing ``prompt_len`` instead of the
-    tokens (``load_trace`` re-synthesizes them per id)."""
+    tokens (``load_trace`` re-synthesizes them per id; shared-prefix
+    records keep ``group``/``prefix_len`` so the group rng rebuilds the
+    common system prompt)."""
     with open(path, "w") as f:
         for t in trace:
             rec: Dict[str, object] = {"id": t["id"]}
@@ -185,6 +260,9 @@ def dump_trace(path: str, trace: List[dict]) -> None:
                 rec["arrival_s"] = t["arrival_s"]
             elif t.get("arrival"):
                 rec["arrival"] = t["arrival"]
+            if "group" in t:
+                rec["group"] = t["group"]
+                rec["prefix_len"] = t["prefix_len"]
             rec["prompt_len"] = int(len(t["prompt"]))
             rec["max_new"] = t["max_new"]
             if "cancel_after" in t:
@@ -261,6 +339,10 @@ def run_trace(engine, trace: List[dict],
     # and a bench replays the same trace on a warm engine.
     reclaim_base = engine.pool.total_reclaimed if paged else 0
     preempt_base = engine.stats["preemptions"]
+    prefixed = paged and engine.prefix is not None
+    phit_base = engine.stats["prefix_hit_tokens"]
+    ptot_base = engine.stats["prefix_prompt_tokens"]
+    cow_base = engine.stats["cow_copies"]
     t0 = time.monotonic()
     while pending or not engine.sched.done():
         if pending:
@@ -327,6 +409,12 @@ def run_trace(engine, trace: List[dict],
         rep["pages_hwm"] = engine.pool.high_water
         rep["pages_reclaimed"] = engine.pool.total_reclaimed - reclaim_base
         rep["preemptions"] = engine.stats["preemptions"] - preempt_base
+    if prefixed:
+        hit = engine.stats["prefix_hit_tokens"] - phit_base
+        tot = engine.stats["prefix_prompt_tokens"] - ptot_base
+        rep["prefix_hit_tokens"] = hit
+        rep["prefix_hit_rate"] = hit / max(1, tot)
+        rep["cow_copies"] = engine.stats["cow_copies"] - cow_base
     return rep
 
 
@@ -343,11 +431,19 @@ def main() -> None:
                     help="arrival gap between requests, in engine steps "
                          "(step-indexed replay)")
     ap.add_argument("--arrivals", type=str, default="steps",
-                    choices=("steps", "uniform", "poisson", "pareto"),
+                    choices=("steps", "shared", "uniform", "poisson",
+                             "pareto"),
                     help="synthetic arrival process: 'steps' keeps the "
-                         "deterministic --stagger replay; the rest "
-                         "generate wall-clock arrival_s at --rate req/s "
-                         "(seedable via --seed) and replay in real time")
+                         "deterministic --stagger replay; 'shared' is a "
+                         "step-indexed shared-system-prompt trace "
+                         "(--groups share groups, group-blocked "
+                         "arrivals — the prefix-cache workload); the "
+                         "rest generate wall-clock arrival_s at --rate "
+                         "req/s (seedable via --seed) and replay in "
+                         "real time")
+    ap.add_argument("--groups", type=int, default=4,
+                    help="share groups (distinct system prompts) for "
+                         "--arrivals shared")
     ap.add_argument("--rate", type=float, default=8.0,
                     help="mean request rate (req/s) for --arrivals")
     ap.add_argument("--speed", type=float, default=1.0,
@@ -390,6 +486,13 @@ def main() -> None:
     ap.add_argument("--pool_pages", type=int, default=0,
                     help="paged: pool capacity in pages (0 = the "
                          "dense-equivalent slots * ceil(max_len/page))")
+    ap.add_argument("--prefix-cache", dest="prefix_cache",
+                    action="store_true",
+                    help="paged: radix-tree prefix caching — prompts "
+                         "sharing page-aligned token prefixes reuse the "
+                         "same physical pool pages (refcounted, "
+                         "copy-on-write; bit-identical to uncached "
+                         "runs)")
     ap.add_argument("--prefill-chunk", dest="prefill_chunk", type=int,
                     default=0,
                     help="split each prompt into N-token chunks "
@@ -448,6 +551,10 @@ def main() -> None:
     if args.trace:
         trace = load_trace(resolve_trace_path(args.trace),
                            cfg.vocab_size, seed=args.seed)
+    elif args.arrivals == "shared":
+        trace = shared_trace(args.requests, args.prompt_len,
+                             args.max_new, args.groups, args.stagger,
+                             cfg.vocab_size, seed=args.seed)
     elif args.arrivals != "steps":
         trace = bursty_trace(args.requests, args.prompt_len,
                              args.max_new, args.arrivals, args.rate,
@@ -469,7 +576,7 @@ def main() -> None:
         temperature=args.temperature, seed=args.seed,
         quantize=args.quantize, eos_id=args.eos_id,
         kv=args.kv, page_size=args.page_size, pool_pages=args.pool_pages,
-        kv_dtype=args.kv_dtype,
+        kv_dtype=args.kv_dtype, prefix_cache=args.prefix_cache,
         prefill_chunk=(None if args.prefill_chunk < 0
                        else args.prefill_chunk),
         token_budget=args.token_budget, policy=args.policy,
@@ -528,6 +635,13 @@ def main() -> None:
         elif args.kv == "paged":
             print(f"[serve] paged kv bypassed: arch {cfg.name} has "
                   f"non-attention state — dense layout in effect")
+        if "prefix_hit_rate" in rep:
+            print(f"[serve] prefix cache: hit_rate="
+                  f"{rep['prefix_hit_rate']:.3f} "
+                  f"hit_tokens={rep['prefix_hit_tokens']} "
+                  f"cow_copies={rep['cow_copies']} "
+                  f"resident={engine.pool.pages_resident}"
+                  f"/{engine.pool.num_pages} pages")
         if args.verify:
             done_trace = [t for t in trace if t["id"] in rep["results"]]
             _verify(cfg, params, done_trace, rep["results"], engine.scfg)
@@ -573,13 +687,17 @@ def _verify(cfg, params, trace, results, scfg) -> None:
     import dataclasses
 
     from repro.serving.engine import ServeConfig, ServeEngine
+    # The reference never shares pages: with ``prefix_cache`` set this
+    # is also the shared-vs-private-pages bit-identity check.
     if scfg.kv_dtype is None:
         one_scfg = dataclasses.replace(scfg, batch_slots=1, kv="dense",
-                                       prefill_chunk=0)
+                                       prefill_chunk=0,
+                                       prefix_cache=False)
         ref_name = "one-shot dense generate()"
     else:
         one_scfg = dataclasses.replace(scfg, batch_slots=1,
-                                       prefill_chunk=0)
+                                       prefill_chunk=0,
+                                       prefix_cache=False)
         ref_name = f"one-shot paged/{scfg.kv_dtype} generate()"
     one = ServeEngine(cfg, params, one_scfg)
     try:

@@ -41,6 +41,19 @@ youngest admission when the pool is exhausted), and completion/EOS
 reclaims a request's pages the same step — KV memory tracks *live
 tokens*, not ``slots x max_len``, which is what lets the paged engine
 admit more concurrent requests than the dense engine at equal memory.
+
+``ServeConfig(prefix_cache=True)`` (paged-only) adds **prefix caching**
+on top of the pool: a :class:`~repro.serving.kvpool.PrefixCache` radix
+tree maps each incoming prompt to already-resident pages, so admission
+charges only the unshared suffix, the chunked-prefill cursor starts at
+the first uncached page (cached pages are never re-forwarded), and
+multiple slots' block tables point at one physical page behind a
+per-page refcount.  Cached pages carry a full-precision sidecar of
+their dense-scratch KV rows, restored into a hit's scratch before the
+suffix chunks run — which is what keeps greedy outputs bit-identical
+to uncached runs for every page dtype, int8 included (the suffix
+attends over exactly the rows the uncached prefill would have
+computed, not a dequantized round trip).
 """
 
 from __future__ import annotations
@@ -57,7 +70,8 @@ from repro.models import (decode_step, forward, init_cache,
                           init_paged_cache, paged_eligible, prefill)
 from repro.models.config import ModelConfig
 from repro.obs import get_obs
-from repro.serving.kvpool import BlockTables, PagePool, pages_for
+from repro.serving.kvpool import (BlockTables, PagePool, PrefixCache,
+                                  pages_for)
 from repro.serving.scheduler import (DECODE, PREFILLING, Request,
                                      Scheduler, Slot)
 
@@ -88,6 +102,19 @@ class ServeConfig:
     # a kv_dtype on an arch that bypasses to dense is an error (the
     # engine must not silently store full-precision pages).
     kv_dtype: Optional[str] = None
+    # Prefix caching (tuner schema v8 `prefix_cache` axis): share
+    # already-resident prompt pages across requests through a radix
+    # tree over token-id prefixes (kvpool.PrefixCache) behind per-page
+    # refcounts, copy-on-write on shared writes.  Paged-only (there is
+    # nothing to share in the dense layout — requesting it with
+    # kv="dense" is an error); archs that bypass the pool to dense
+    # bypass the cache too, transparently.  Forces the chunked prefill
+    # path (a hit moves the prompt cursor past the cached pages), with
+    # prefill_chunk=0 meaning "one chunk covers the whole suffix".
+    # Greedy outputs are bit-identical to uncached runs for every page
+    # dtype — hits restore a full-precision scratch sidecar, so the
+    # suffix prefill sees exactly the rows it would have computed.
+    prefix_cache: bool = False
     # Chunked prefill (tuner schema v7 `prefill_chunk` axis): 0 =
     # monolithic per-admission prefill (the historical behavior,
     # bit-for-bit); N > 0 splits each prompt into N-token chunks
@@ -214,6 +241,11 @@ class ServeEngine:
                     f"full-precision KV.  Drop kv_dtype (the bypass is "
                     f"only transparent for the default page precision) "
                     f"or serve an attention-only arch")
+        if scfg.prefix_cache and scfg.kv != "paged":
+            raise ValueError(
+                f"ServeConfig.prefix_cache requires kv='paged' — the "
+                f"dense layout has no page pool to share prefixes "
+                f"through (got kv={scfg.kv!r})")
         if scfg.batch_slots == 0:
             # Tuned slot count (schema v5 `serve` op): measured best for
             # this arch/workload when the cache has one, else the
@@ -246,9 +278,18 @@ class ServeEngine:
             # Dense scratch the per-slot prefill runs against, page-
             # aligned so whole pages scatter into the pool.
             self._fresh_len = self._max_pages * ps
+            if scfg.prefix_cache:
+                self.prefix = PrefixCache(self.pool)
+                # Pool shortfalls evict LRU cache-only pages *before*
+                # alloc fails — cache eviction always precedes slot
+                # preemption.
+                self.pool.reclaimer = self.prefix.evict
+            else:
+                self.prefix = None
         else:
             self.pool = None
             self.blocks = None
+            self.prefix = None
             self._fresh_len = scfg.max_len
         if scfg.prefill_chunk is None:
             # Tuned chunk size (schema v7 `serve` op): measured best
@@ -280,6 +321,11 @@ class ServeEngine:
                              f"(or None = tuner), got {chunk}")
         if chunk and not paged_eligible(cfg):
             chunk = 0
+        if self.prefix is not None and chunk == 0:
+            # Prefix skip rides the chunked cursor: with no explicit
+            # chunk size, one page-aligned chunk covers the whole
+            # uncached suffix (bit-identical to monolithic, PR 8).
+            chunk = self._fresh_len
         if chunk and self.kv_mode == "paged":
             # Page-aligned chunks: every chunk's scratch span covers
             # whole pages, so the per-chunk scatter writes full pages.
@@ -336,6 +382,11 @@ class ServeEngine:
                                                      block_tables=bt))
             self._insert = jax.jit(self._insert_slot_pages)
             self._insert_chunk = jax.jit(self._insert_chunk_pages)
+            # COW page copy: duplicate pool row src -> dst across every
+            # layer's pools (page axis 1, after the layer-group dim).
+            self._copy_page = jax.jit(
+                lambda c, src, dst: jax.tree.map(
+                    lambda a: a.at[:, dst].set(a[:, src]), c))
         else:
             self._decode = jax.jit(
                 lambda p, t, pos, c: decode_step(p, t, pos, cfg, c))
@@ -372,6 +423,20 @@ class ServeEngine:
         # covers dense and paged runs (dense holds no pages: stays 0).
         obs.registry.gauge("kvpool.pages_in_use",
                            "KV pages currently allocated")
+        # Prefix-cache telemetry, registered in every layout for one
+        # snapshot schema (stays 0 when the cache is off): lookups,
+        # cumulative hit tokens, and the running hit-rate gauge
+        # (hit_tokens / prompt tokens over all admissions).
+        self._c_plookup = obs.registry.counter(
+            "prefix.lookup", "prefix-cache lookups at admission")
+        self._c_phit = obs.registry.counter(
+            "prefix.hit_tokens",
+            "prompt tokens served from cached pages (never re-forwarded)")
+        self._g_phit_rate = obs.registry.gauge(
+            "prefix.hit_rate",
+            "cumulative hit_tokens / prompt tokens across admissions")
+        self._prefix_hit_tokens = 0
+        self._prefix_prompt_tokens = 0
         if self.pool is not None:
             self.pool.bind_metrics(obs.registry)
         # -- continuous-batching state (persistent across calls) ----------
@@ -397,7 +462,9 @@ class ServeEngine:
                       "prefill_chunks": 0, "decode_steps": 0,
                       "shared_steps": 0, "preemptions": 0,
                       "eos_exits": 0, "cancelled": 0,
-                      "starved_steps": 0}
+                      "starved_steps": 0, "prefix_hits": 0,
+                      "prefix_hit_tokens": 0, "prefix_prompt_tokens": 0,
+                      "cow_copies": 0}
 
     # -- lifecycle ----------------------------------------------------------
 
@@ -593,6 +660,74 @@ class ServeEngine:
             "k_pages": scat(fc["attn"]["k_pages"], oc["attn"]["k"]),
             "v_pages": scat(fc["attn"]["v_pages"], oc["attn"]["v"]),
         }} for fc, oc in zip(full, one)]
+
+    # -- prefix cache (kvpool.PrefixCache) ----------------------------------
+
+    def prefix_hit_rate(self) -> float:
+        """Cumulative prefix-cache hit rate: cached prompt tokens over
+        all prompt tokens admitted (0.0 when the cache is off)."""
+        return self._prefix_hit_tokens / max(1, self._prefix_prompt_tokens)
+
+    def _note_prefix(self, req: Request, hit_pages: int) -> None:
+        """Account one admission's lookup outcome (counted once per
+        admission, when the pinned hit is consumed — not per fits()
+        probe, so deferred requests don't skew the rate)."""
+        ht = hit_pages * self.pool.page_size
+        self._c_plookup.inc()
+        self._prefix_prompt_tokens += req.prompt_len
+        self.stats["prefix_prompt_tokens"] = self._prefix_prompt_tokens
+        if ht:
+            self._c_phit.inc(ht)
+            self._prefix_hit_tokens += ht
+            self.stats["prefix_hits"] += 1
+            self.stats["prefix_hit_tokens"] = self._prefix_hit_tokens
+        self._g_phit_rate.set(self.prefix_hit_rate())
+
+    def _slice_prefix_page(self, scratch, page_idx: int):
+        """One full page of a slot's dense-scratch KV rows, every
+        layer — the radix node's *full-precision sidecar* (kept at
+        scratch dtype for every kv_dtype, so a later hit restores
+        exactly the rows this prefill computed)."""
+        ps = self.pool.page_size
+        lo = page_idx * ps
+        return [{"attn": {
+            "k": lc["attn"]["k"][:, :, :, lo:lo + ps, :],
+            "v": lc["attn"]["v"][:, :, :, lo:lo + ps, :],
+        }} for lc in scratch]
+
+    def _restore_prefix(self, scratch, payloads):
+        """Write a hit's sidecar pages into a fresh scratch's leading
+        rows; leaves beyond attention K/V (none on paged-eligible
+        archs) pass through untouched."""
+        out = []
+        for li, lc in enumerate(scratch):
+            upd = {}
+            for k in ("k", "v"):
+                rows = jnp.concatenate(
+                    [p[li]["attn"][k] for p in payloads], axis=3)
+                upd[k] = jax.lax.dynamic_update_slice_in_dim(
+                    lc["attn"][k], rows.astype(lc["attn"][k].dtype),
+                    0, axis=3)
+            out.append({**lc, "attn": {**lc["attn"], **upd}})
+        return out
+
+    def _cache_prefix(self, slot: Slot, req: Request) -> None:
+        """At prefill completion, insert the prompt's full pages (and
+        their scratch-row sidecars) into the radix tree.  The tree
+        takes its own pool reference per newly cached page, so the
+        pages outlive this slot; decode appends land strictly after
+        the full-page prefix, so cached pages are never written again
+        (COW guards the invariant anyway)."""
+        ps = self.pool.page_size
+        full = req.prompt_len // ps
+        if full == 0:
+            return
+        scratch = self._scratch[slot.index]
+        payloads = [self._slice_prefix_page(scratch, i)
+                    for i in range(full)]
+        self.prefix.insert(req.prompt[:full * ps],
+                           self.blocks.slot_pages(slot.index)[:full],
+                           payloads)
 
     def _make_sampler(self):
         temp = self.scfg.temperature
@@ -843,6 +978,7 @@ class ServeEngine:
         of the kernel's ping-pong page gather (nothing blocks between
         one chunk's scatter and the next chunk's compute)."""
         fits = None
+        pins: Dict[int, tuple] = {}     # rid -> pinned (pages, payloads)
         if self.kv_mode == "paged":
             budget = self.pool.free_pages
             state = {"reserved": 0}
@@ -852,8 +988,32 @@ class ServeEngine:
                 # prompt_len — for a page-aligned prompt that is a
                 # fresh page, and admitting without it would prefill
                 # only to self-preempt in _grow_pages the same step.
-                need = pages_for(req.prompt_len + 1, self.pool.page_size)
-                if state["reserved"] + need > budget:
+                ps = self.pool.page_size
+                need = pages_for(req.prompt_len + 1, ps)
+                if self.prefix is None:
+                    headroom = budget
+                else:
+                    if req.rid not in pins:
+                        # Hit capped below the last prompt token: the
+                        # final token is always forwarded (its logits
+                        # seed decode), so only *full* pages strictly
+                        # before it can come from the cache.
+                        cap = (req.prompt_len - 1) // ps
+                        hit = self.prefix.lookup(req.prompt,
+                                                 max_pages=cap)
+                        if hit[0]:
+                            # Pin: the shared ref keeps these pages out
+                            # of this pass's evictable() headroom and
+                            # off the evictor entirely.
+                            self.pool.share(hit[0])
+                        pins[req.rid] = hit
+                    # Charge only the unshared suffix; LRU cache-only
+                    # pages count as headroom (alloc evicts them via
+                    # the pool's reclaimer hook).
+                    need -= len(pins[req.rid][0])
+                    headroom = (self.pool.free_pages
+                                + self.prefix.evictable())
+                if state["reserved"] + need > headroom:
                     self._c_rejects.inc()
                     return False
                 state["reserved"] += need
@@ -871,19 +1031,42 @@ class ServeEngine:
                 slot = self.sched.admit(req)
             tr.async_end("queued", req.rid)
             tr.async_begin("decode", req.rid, slot=slot.index)
+            hit_pages, hit_payloads = pins.pop(req.rid, ([], []))
             if self.kv_mode == "paged":
-                pages = self.blocks.assign(slot.index, req.prompt_len)
+                # The slot takes ownership of the pinned shared prefix
+                # (refs transfer; release is symmetric) and allocates
+                # only the unshared suffix.
+                pages = self.blocks.assign(slot.index, req.prompt_len,
+                                           shared=hit_pages)
                 assert pages is not None, "admission fits() reserved these"
+                if self.prefix is not None:
+                    self._note_prefix(req, len(hit_pages))
             self._slot_req[slot.index] = req
             if self.prefill_chunk:
                 self._scratch[slot.index] = init_cache(
                     self.cfg, 1, self._fresh_len,
                     enc_len=self.scfg.enc_len)
+                if hit_pages:
+                    # Restore the cached pages' full-precision KV rows
+                    # into the scratch and start the prompt cursor at
+                    # the first uncached page: cached tokens are never
+                    # re-forwarded, and the suffix chunks attend over
+                    # exactly the rows an uncached prefill would have
+                    # computed (bit-identity, any page dtype).
+                    self._scratch[slot.index] = self._restore_prefix(
+                        self._scratch[slot.index], hit_payloads)
+                    slot.prefill_pos = \
+                        len(hit_pages) * self.pool.page_size
             else:
                 inflight.append((slot, req,
                                  self._prefill_slot(slot, req)))
             self.stats["admitted"] += 1
             events["admitted"].append(req.rid)
+        # Unpin fits()-approved requests the policy did not select this
+        # pass (they stay queued; the next pass re-pins).
+        for hp, _ in pins.values():
+            if hp:
+                self.pool.release(hp)
         for slot, req, tok0_dev in inflight:
             # First host sync of the pass: every later admission's
             # prefill + scatter is already in the device queue.
@@ -933,9 +1116,20 @@ class ServeEngine:
         chunk, plen = self.prefill_chunk, req.prompt_len
         c0 = slot.prefill_pos
         take = min(chunk, plen - c0)
+        # Buffer sized to the page-aligned take, never the full chunk:
+        # the KV write window is [c0, c0+buf), and a full-chunk buffer
+        # on a tail chunk (or a cursor advanced past cached pages) can
+        # cross the scratch end — dynamic_update_slice would *clamp*
+        # the start and corrupt rows below the cursor.  Aligned take
+        # keeps c0+buf <= ceil(plen/ps)*ps <= scratch rows, always.
+        if self.kv_mode == "paged":
+            ps = self.pool.page_size
+            buf = pages_for(take, ps) * ps
+        else:
+            buf = min(chunk, self._fresh_len - c0)
         with self._obs.tracer.span("prefill_chunk", cat="engine",
                                    rid=req.rid, lo=c0, take=take):
-            toks = np.zeros((1, chunk), np.int32)
+            toks = np.zeros((1, buf), np.int32)
             toks[0, :take] = req.prompt[c0:c0 + take]
             batch: Dict[str, jax.Array] = {"tokens": jnp.asarray(toks)}
             if req.enc_embeds is not None:
@@ -949,8 +1143,7 @@ class ServeEngine:
                 # a page boundary; spans past the slot's table (or the
                 # scratch) clamp onto the null sink / last page — the
                 # sink absorbs what the clamp duplicates.
-                ps = self.pool.page_size
-                cpp = chunk // ps
+                cpp = buf // ps
                 p_lo = c0 // ps
                 mp = self._max_pages
                 ids = np.full((cpp,), self.pool.num_pages, np.int32)
@@ -973,6 +1166,10 @@ class ServeEngine:
             self.caches = self._insert(
                 self.caches, self._scratch[slot.index],
                 jnp.asarray(slot.index, jnp.int32))
+        if self.prefix is not None:
+            # Cache the completed prompt's full pages (+ sidecars)
+            # while the scratch still holds their full-precision rows.
+            self._cache_prefix(slot, req)
         self._scratch.pop(slot.index, None)
         tok0 = int(np.asarray(jnp.argmax(logits[0, take - 1])))
         slot.state = DECODE
@@ -1033,12 +1230,42 @@ class ServeEngine:
                         key=lambda s: s.admit_seq):
             if s.state != DECODE:
                 continue            # preempted by an earlier iteration
+            if self.prefix is not None and not self._cow_guard(s, events):
+                continue            # s preempted itself finding a copy
             while not self.blocks.extend_to(s.index, s.length + 1):
                 victim = max(self.sched.active_slots(),
                              key=lambda v: v.admit_seq)
                 self._preempt(victim, events)
                 if victim is s:
                     break           # s yielded its own pages; skip it
+
+    def _cow_guard(self, s: Slot, events: Dict[str, Any]) -> bool:
+        """Copy-on-write before a decode write lands in a shared page:
+        if the page covering position ``length`` (this step's KV write)
+        has other referents, duplicate it into a fresh exclusive page
+        first — sharers keep the original bits.  By construction cached
+        pages sit strictly before the first decode position, so this is
+        a safety invariant, not a hot path.  False means the slot
+        preempted itself paying for the copy (skip its extend)."""
+        idx = s.length // self.pool.page_size
+        spages = self.blocks.slot_pages(s.index)
+        if idx >= len(spages) or self.pool.refcount(spages[idx]) <= 1:
+            return True
+        res = self.blocks.cow(s.index, idx)
+        while res is None:          # pool exhausted even after eviction
+            victim = max(self.sched.active_slots(),
+                         key=lambda v: v.admit_seq)
+            self._preempt(victim, events)
+            if victim is s:
+                return False
+            res = self.blocks.cow(s.index, idx)
+        src, dst = res
+        if src != dst:
+            self.caches = self._copy_page(
+                self.caches, jnp.asarray(src, jnp.int32),
+                jnp.asarray(dst, jnp.int32))
+            self.stats["cow_copies"] += 1
+        return True
 
     def _preempt(self, slot: Slot, events: Dict[str, Any]) -> None:
         """Evict a mid-decode request to reclaim its pages: partial

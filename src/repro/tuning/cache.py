@@ -48,6 +48,13 @@ Schema history (see docs/TUNING.md for the full notes):
   discarded wholesale on load — a v6 serve entry's us-per-token was
   measured with prefill stalls the chunked candidates don't pay, so it
   must not silently win against them.
+* **v8** — ``serve`` configs gain ``prefix_cache``: radix-tree prefix
+  sharing over pool pages (COW shared pages; paged layouts only — the
+  dense layout has no page indirection to share through).  v7 files are
+  discarded wholesale on load, per the invalidation policy: a v7 serve
+  entry's us-per-token was measured without the prefix-reuse axis and
+  must not silently win against candidates that skip shared-prefill
+  work it paid for.
 """
 
 from __future__ import annotations
@@ -58,7 +65,7 @@ import tempfile
 from pathlib import Path
 from typing import Any, Dict, Optional
 
-SCHEMA_VERSION = 7
+SCHEMA_VERSION = 8
 
 _ENV_VAR = "REPRO_TUNING_CACHE"
 

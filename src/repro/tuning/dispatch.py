@@ -214,9 +214,10 @@ def _serve_key(cfg, max_len: int, dt: str, backend: str, kind: str) -> str:
 
 def serve_config(cfg, max_len: int, dtype) -> ServeCandidate:
     """Best-known continuous-batching engine tunables for this
-    arch/workload (schema v7: slot count + paged-KV page size + page
-    kv_dtype + chunked-prefill chunk), falling back to the analytic
-    prior (8 slots / 32-token pages, full-precision, monolithic)."""
+    arch/workload (schema v8: slot count + paged-KV page size + page
+    kv_dtype + chunked-prefill chunk + prefix-cache bit), falling back
+    to the analytic prior (8 slots / 32-token pages, full-precision,
+    monolithic, uncached)."""
     dt = canonical_dtype(dtype)
     backend, kind = backend_fingerprint()
     key = _serve_key(cfg, max_len, dt, backend, kind)
@@ -272,6 +273,19 @@ def serve_prefill_chunk(cfg, max_len: int, dtype) -> int:
     if not paged_eligible(cfg):
         return 0
     return serve_config(cfg, max_len, dtype).prefill_chunk
+
+
+def serve_prefix_cache(cfg, max_len: int, dtype) -> bool:
+    """Best-known prefix-cache setting for a ``kv="paged"`` engine
+    (``ServeConfig.prefix_cache = None`` hook).  Returns False — no
+    sharing, the historical behavior — unless a *measured* tuned entry
+    chose a prefix-cached candidate: a cache miss must never change
+    pool accounting or admission charging.  Archs the page pool cannot
+    cover always get False — there are no pages to share."""
+    from repro.models.model import paged_eligible
+    if not paged_eligible(cfg):
+        return False
+    return serve_config(cfg, max_len, dtype).prefix_cache
 
 
 def warm_gemm_shapes(shapes: Sequence[Tuple[int, int, int]], dtype) -> int:
@@ -496,13 +510,15 @@ def tune_serve(cfg, *, max_len: int = 64, prompt_len: int = 8,
                stagger: int = 2, keep: int = 3, warmup: int = 0,
                reps: int = 1, force: bool = False,
                cache: Optional[TuningCache] = None) -> TuneResult:
-    """Tune the continuous-batching engine (schema v7 ``serve`` op:
+    """Tune the continuous-batching engine (schema v8 ``serve`` op:
     slot count x paged-KV page size x page kv_dtype x chunked-prefill
-    chunk) for one model config: each surviving candidate runs a full
-    staggered-arrival trace through ``ServeEngine`` — with the
-    candidate's KV layout and prefill chunking live — and is scored on
+    chunk x prefix-cache bit) for one model config: each surviving
+    candidate runs a full staggered-arrival trace through
+    ``ServeEngine`` — with the candidate's KV layout, prefill chunking
+    and prefix sharing live (the tuning trace carries a shared prompt
+    prefix so the reuse axis is actually exercised) — and is scored on
     measured us-per-token (i.e. tokens/s), with completeness as the
-    numerics gate.  Quantized-page candidates
+    numerics gate.  Quantized-page and prefix-cached candidates
     are dropped up front for archs the page pool cannot cover (the
     engine would reject them — see ``ServeConfig.kv_dtype``).  ``cfg``
     is a ``ModelConfig`` (use the smoke config of an arch — the
@@ -518,11 +534,12 @@ def tune_serve(cfg, *, max_len: int = 64, prompt_len: int = 8,
         return hit
     space = DesignSpace.serve(max_len=max_len)
     if not paged_eligible(cfg):
-        # The engine bypasses quantized pages (error) and chunked
-        # prefill (silently, to monolithic) on these archs — chunked
-        # candidates would just re-measure their monolithic twin.
+        # The engine bypasses quantized pages (error), chunked
+        # prefill, and prefix caching (both silently, with the dense
+        # fallback) on these archs — chunked / cached candidates would
+        # just re-measure their monolithic / uncached twin.
         space = [c for c in space if not c.kv_dtype
-                 and not c.prefill_chunk]
+                 and not c.prefill_chunk and not c.prefix_cache]
     survivors = prior.prune_serve(space, max_len, keep=keep)
     return _measure_and_store(
         key, tc, survivors,

@@ -263,7 +263,15 @@ def serve_score(c: ServeCandidate, max_len: int) -> Tuple:
     # inter-token tail latency — a win this throughput-modeled score
     # cannot see.  Rank chunked candidates just below their monolithic
     # twin so they are measured, and win only when actually faster.
-    return (round(thpt * 1e6), -waste, -c.slots, -c.prefill_chunk)
+    # Prefix caching (schema v8) is the same shape: a strict win on
+    # shared-prompt traffic (skipped prefill + multiplied pool
+    # capacity) that this model cannot size, and pure overhead (radix
+    # bookkeeping) on disjoint prompts.  Rank cached candidates
+    # immediately below their uncached twin — close enough to survive
+    # the prune and be measured on the tuning trace, winning only when
+    # the measured reuse actually pays.
+    return (round(thpt * 1e6), -waste, -c.slots, -c.prefill_chunk,
+            -int(c.prefix_cache))
 
 
 def prune_serve(candidates: Sequence[ServeCandidate], max_len: int,
@@ -282,5 +290,8 @@ def analytic_serve(max_len: int) -> ServeCandidate:
     change numerics and must be opted into (CLI / tuner measurement),
     never silently enabled by a cache miss.  ``prefill_chunk`` stays 0
     for the same reason: chunking reshapes a stream's latency profile,
-    and a cache miss must never change behavior, only a measurement."""
+    and a cache miss must never change behavior, only a measurement.
+    ``prefix_cache`` stays False likewise: sharing pages changes pool
+    accounting and admission charging, so it is only turned on by an
+    explicit opt-in (CLI ``--prefix-cache``) or a measured winner."""
     return ServeCandidate(slots=8, page_size=32)

@@ -266,16 +266,25 @@ def time_serve(cand: ServeCandidate, cfg, max_len: Optional[int] = None,
     # raises for archs that cannot honor it, which _measure_and_store
     # records as a failed trial rather than aborting the tune.
     # prefill_chunk (schema v7) runs the unified chunked step loop;
-    # 0 keeps the monolithic per-admission prefill.
+    # 0 keeps the monolithic per-admission prefill.  prefix_cache
+    # (schema v8) shares radix-matched prompt pages through the pool.
     engine = ServeEngine(cfg, params, ServeConfig(
         batch_slots=cand.slots, max_len=max_len, pretune=False,
         kv="paged" if cand.page_size > 0 else "dense",
         page_size=cand.page_size,
         kv_dtype=cand.kv_dtype or None,
-        prefill_chunk=cand.prefill_chunk))
+        prefill_chunk=cand.prefill_chunk,
+        prefix_cache=cand.prefix_cache))
     rng = np.random.default_rng(0)
     prompts = rng.integers(0, cfg.vocab_size,
                            size=(n_req, prompt_len)).astype(np.int32)
+    # Tuning traces carry a shared system-prompt prefix (the first half
+    # of every prompt is identical) so the v8 prefix_cache axis is
+    # exercised — on all-disjoint prompts a cached candidate could only
+    # lose, and production shared-prompt traffic is exactly where the
+    # bit matters.  Uncached candidates see the same trace, so the
+    # comparison stays apples-to-apples.
+    prompts[:, :prompt_len // 2] = prompts[0, :prompt_len // 2]
     last: dict = {}
 
     def run():

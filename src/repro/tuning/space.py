@@ -106,7 +106,7 @@ class WkvCandidate:
 
 @dataclasses.dataclass(frozen=True)
 class ServeCandidate:
-    """Continuous-batching engine tunables (schema v7): ``slots`` is
+    """Continuous-batching engine tunables (schema v8): ``slots`` is
     how many requests decode per batched step; ``page_size`` is the
     paged-KV pool's tokens-per-page granularity (0 = dense per-slot
     max_len reservation — the pre-kvpool layout); ``kv_dtype`` is the
@@ -115,13 +115,17 @@ class ServeCandidate:
     ``prefill_chunk`` is the unified step loop's chunk size (0 =
     monolithic per-admission prefill, N = N-token prompt chunks
     interleaved with decode — paged candidates keep chunks a page
-    multiple).  Schema v6 lacked ``prefill_chunk``; v5 ``kv_dtype``;
-    v4 ``page_size``."""
+    multiple); ``prefix_cache`` enables radix-tree prefix sharing over
+    pool pages (COW shared pages — paged only: the dense layout has no
+    page indirection to share through).  Schema v7 lacked
+    ``prefix_cache``; v6 ``prefill_chunk``; v5 ``kv_dtype``; v4
+    ``page_size``."""
 
     slots: int
     page_size: int = 0
     kv_dtype: str = ""
     prefill_chunk: int = 0
+    prefix_cache: bool = False
 
     def to_json(self) -> dict:
         return dataclasses.asdict(self)
@@ -131,7 +135,8 @@ class ServeCandidate:
         return cls(slots=int(d["slots"]),
                    page_size=int(d.get("page_size", 0)),
                    kv_dtype=str(d.get("kv_dtype", "")),
-                   prefill_chunk=int(d.get("prefill_chunk", 0)))
+                   prefill_chunk=int(d.get("prefill_chunk", 0)),
+                   prefix_cache=bool(d.get("prefix_cache", False)))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -268,6 +273,7 @@ class DesignSpace:
     SERVE_PAGE_SIZES: Sequence[int] = (0, 16, 32, 64)   # 0 = dense KV
     SERVE_KV_DTYPES: Sequence[str] = ("", "int8")       # "" = cache dtype
     SERVE_PREFILL_CHUNKS: Sequence[int] = (0, 16, 32)   # 0 = monolithic
+    SERVE_PREFIX_CACHE: Sequence[bool] = (False, True)  # paged only
 
     @classmethod
     def serve(cls, max_slots: int = 32,
@@ -283,9 +289,12 @@ class DesignSpace:
         paged candidates only carry chunks that are a page multiple,
         since the engine rounds up anyway — unaligned chunks would be
         duplicate measurements; chunks at or beyond max_len collapse to
-        monolithic and are likewise excluded).  Always includes the
-        engine's untuned default (8 slots, dense, monolithic) so tuning
-        can never regress below the fallback.
+        monolithic and are likewise excluded), and the prefix-cache bit
+        for paged layouts only (schema v8: the dense layout has no page
+        indirection to share pages through, so page_size == 0 stays
+        uncached).  Always includes the engine's untuned default
+        (8 slots, dense, monolithic, uncached) so tuning can never
+        regress below the fallback.
 
         >>> [c.slots for c in DesignSpace.serve(max_slots=4)
         ...  if c.page_size == 0 and c.prefill_chunk == 0]
@@ -300,18 +309,22 @@ class DesignSpace:
         ...         if c.kv_dtype == ''})      # doctest: +NORMALIZE_WHITESPACE
         [(0, 0), (0, 16), (0, 32), (16, 0), (16, 16), (16, 32),
          (32, 0), (32, 32), (64, 0)]
+        >>> sorted({(c.page_size, c.prefix_cache)
+        ...         for c in DesignSpace.serve(max_len=24)})
+        [(0, False), (16, False), (16, True), (32, False), (32, True)]
         """
         slots = {s for s in cls.SERVE_SLOTS if s <= max(max_slots, 1)}
         slots.add(8)
         pages = [p for p in cls.SERVE_PAGE_SIZES
                  if max_len <= 0 or p == 0 or p < 2 * max_len]
         return [ServeCandidate(slots=s, page_size=p, kv_dtype=kd,
-                               prefill_chunk=pc)
+                               prefill_chunk=pc, prefix_cache=px)
                 for s in sorted(slots) for p in pages
                 for kd in cls.SERVE_KV_DTYPES if p or not kd
                 for pc in cls.SERVE_PREFILL_CHUNKS
                 if (pc == 0 or ((p == 0 or pc % p == 0)
-                                and (max_len <= 0 or pc < max_len)))]
+                                and (max_len <= 0 or pc < max_len)))
+                for px in cls.SERVE_PREFIX_CACHE if p or not px]
 
     @classmethod
     def wkv(cls, t: int, n: int) -> List["WkvCandidate"]:

@@ -130,6 +130,91 @@ def test_pool_fragmentation_property(draw):
     assert pool.pages_in_use == 0 and pool.free_pages == pool.num_pages
 
 
+@given(st.tuples(
+    st.integers(min_value=0, max_value=10 ** 9),     # op-sequence seed
+    st.integers(min_value=1, max_value=4),           # page size
+))
+@settings(max_examples=20, deadline=None)
+def test_pool_sharing_property(draw):
+    """Fragmentation property extended with prefix-sharing traffic:
+    random interleavings of assign / extend / cache-pin / cache-unpin /
+    copy-on-write / release keep every refcount invariant exact — a
+    referenced page is never reclaimed, the last release reclaims
+    exactly once, live vs resident accounting never drifts, and the
+    drained pool is fully free with double-free still a loud error."""
+    seed, ps = draw
+    rng = np.random.default_rng(seed)
+    pool = PagePool(num_pages=int(rng.integers(4, 12)), page_size=ps)
+    n_slots = int(rng.integers(1, 4))
+    bt = BlockTables(pool, n_slots=n_slots, max_pages=pool.num_pages)
+    tokens = {}                  # live slot -> tokens
+    cache_pins = []              # lists of pages holding one cache ref
+    for _ in range(80):
+        op = rng.integers(0, 6)
+        if op == 0 and len(tokens) < n_slots:        # admit
+            slot = next(i for i in range(n_slots) if i not in tokens)
+            want = int(rng.integers(1, pool.num_pages * ps + 1))
+            if bt.assign(slot, want) is not None:
+                tokens[slot] = want
+        elif op == 1 and tokens:                     # decode append
+            slot = sorted(tokens)[int(rng.integers(0, len(tokens)))]
+            grown = tokens[slot] + int(rng.integers(1, ps + 1))
+            if pages_for(grown, ps) <= bt.max_pages \
+                    and bt.extend_to(slot, grown):
+                tokens[slot] = grown
+        elif op == 2 and tokens:                     # complete / evict
+            slot = sorted(tokens)[int(rng.integers(0, len(tokens)))]
+            pages = list(bt.slot_pages(slot))
+            pinned = {p for pin in cache_pins for p in pin}
+            freed = bt.release(slot)
+            del tokens[slot]
+            # Cache-pinned pages survive the slot (never reclaimed
+            # while referenced); unpinned ones are freed exactly once.
+            assert freed == sum(1 for p in pages if p not in pinned)
+            assert all(pool.refcount(p) >= 1 for p in pages
+                       if p in pinned)
+        elif op == 3 and tokens:                     # radix-tree pin
+            slot = sorted(tokens)[int(rng.integers(0, len(tokens)))]
+            pages = list(bt.slot_pages(slot))
+            if pages:
+                pool.share(pages, cache=True)
+                cache_pins.append(pages)
+        elif op == 4 and cache_pins:                 # radix-tree evict
+            pin = cache_pins.pop(int(rng.integers(0, len(cache_pins))))
+            pool.release(pin, cache=True)
+        elif op == 5 and tokens:                     # copy-on-write
+            slot = sorted(tokens)[int(rng.integers(0, len(tokens)))]
+            pages = bt.slot_pages(slot)
+            if pages:
+                idx = int(rng.integers(0, len(pages)))
+                was_shared = pool.refcount(pages[idx]) > 1
+                res = bt.cow(slot, idx)
+                if res is not None:
+                    src, dst = res
+                    assert (src != dst) == was_shared
+                    if src != dst:
+                        # Fresh exclusive copy; sharers keep the source.
+                        assert pool.refcount(dst) == 1
+                        assert pool.refcount(src) >= 1
+                        assert bt.slot_pages(slot)[idx] == dst
+        pool.check()
+        live = {p for s in tokens for p in bt.slot_pages(s)}
+        resident = live | {p for pin in cache_pins for p in pin}
+        assert pool.pages_in_use == len(live)
+        assert pool.pages_resident == len(resident)
+    for slot in sorted(tokens):
+        bt.release(slot)
+    for pin in cache_pins:
+        pool.release(pin, cache=True)
+    pool.check()
+    assert pool.pages_in_use == 0 and pool.free_pages == pool.num_pages
+    # Double-free is still a loud error after all the sharing traffic.
+    pg = pool.alloc(1)
+    pool.release(pg)
+    with pytest.raises(ValueError, match="not in use"):
+        pool.release(pg)
+
+
 # ---------------------------------------------------------------------------
 # Scheduler integration: capacity gate + requeue
 # ---------------------------------------------------------------------------
@@ -515,64 +600,74 @@ def test_paged_oversubscribes_dense_reservation():
 
 
 # ---------------------------------------------------------------------------
-# Tuner schema v7: page_size + kv_dtype + prefill_chunk dispatch
+# Tuner schema v8: page_size + kv_dtype + prefill_chunk + prefix_cache
 # ---------------------------------------------------------------------------
 
 
-def test_serve_candidate_v7_roundtrip_and_dispatch():
+def test_serve_candidate_v8_roundtrip_and_dispatch():
     from repro.tuning import dispatch
     from repro.tuning.space import DesignSpace, ServeCandidate
     c = ServeCandidate(slots=4, page_size=32, kv_dtype="int8",
-                       prefill_chunk=32)
+                       prefill_chunk=32, prefix_cache=True)
     assert ServeCandidate.from_json(c.to_json()) == c
-    # v4/v5/v6-era JSON (progressively fewer axes) still parses.
+    # v4..v7-era JSON (progressively fewer axes) still parses.
     assert ServeCandidate.from_json({"slots": 8}).page_size == 0
     assert ServeCandidate.from_json({"slots": 8,
                                      "page_size": 16}).kv_dtype == ""
     assert ServeCandidate.from_json(
         {"slots": 8, "page_size": 16, "kv_dtype": ""}).prefill_chunk == 0
+    assert ServeCandidate.from_json(
+        {"slots": 8, "page_size": 16, "kv_dtype": "",
+         "prefill_chunk": 0}).prefix_cache is False
     space = DesignSpace.serve(max_len=64)
     assert {c.page_size for c in space} == {0, 16, 32, 64}
     assert {c.kv_dtype for c in space} == {"", "int8"}
     assert {c.prefill_chunk for c in space} == {0, 16, 32}
-    # int8 is a page-pool property: never crossed with the dense layout.
+    assert {c.prefix_cache for c in space} == {False, True}
+    # int8 and prefix sharing are page-pool properties: never crossed
+    # with the dense layout.
     assert not any(c.kv_dtype and c.page_size == 0 for c in space)
+    assert not any(c.prefix_cache and c.page_size == 0 for c in space)
     # Paged chunks are page-aligned; every chunk is below max_len.
     assert all(c.prefill_chunk % c.page_size == 0 for c in space
                if c.prefill_chunk and c.page_size)
     assert all(c.prefill_chunk < 64 for c in space)
     # Analytic fallbacks: slots unchanged from v4, page granularity 32,
     # kv_dtype never quantized by default, prefill monolithic by
-    # default (a miss must not change numerics or reshape latency).
+    # default, prefix sharing off by default (a miss must not change
+    # numerics, reshape latency, or pool accounting).
     assert dispatch.serve_slots(CFG, 64, "float32") == 8
     assert dispatch.serve_page_size(CFG, 64, "float32") == 32
     assert dispatch.serve_kv_dtype(CFG, 64, "float32") is None
     assert dispatch.serve_prefill_chunk(CFG, 64, "float32") == 0
-    # Archs the pool cannot cover never get a quantized dtype or a
-    # chunked prefill, tuned or not (their pages silently fall back to
-    # the dense layout, chunking to monolithic).
+    assert dispatch.serve_prefix_cache(CFG, 64, "float32") is False
+    # Archs the pool cannot cover never get a quantized dtype, a
+    # chunked prefill, or a shared prefix, tuned or not (their pages
+    # silently fall back to the dense layout).
     assert dispatch.serve_kv_dtype(C.get_smoke("rwkv6_3b"), 64,
                                    "float32") is None
     assert dispatch.serve_prefill_chunk(C.get_smoke("rwkv6_3b"), 64,
                                         "float32") == 0
+    assert dispatch.serve_prefix_cache(C.get_smoke("rwkv6_3b"), 64,
+                                       "float32") is False
 
 
-def test_schema_v7_discards_v6_serve_entries(tmp_path):
-    """A v6 cache file — even with a well-formed serve entry — must be
-    invalidated wholesale: its timing was measured with monolithic
-    prefill stalls the chunked candidates don't pay, so it never fairly
-    competed against the prefill_chunk axis."""
+def test_schema_v8_discards_v7_serve_entries(tmp_path):
+    """A v7 cache file — even with a well-formed serve entry — must be
+    invalidated wholesale: its winners never competed against the
+    prefix_cache axis, and a stale uncached winner would silently keep
+    shared-prompt traffic on the unshared pool accounting."""
     import json
 
     from repro.tuning.cache import SCHEMA_VERSION, TuningCache, cache_key
-    assert SCHEMA_VERSION == 7
+    assert SCHEMA_VERSION == 8
     path = tmp_path / "tuning_cache.json"
     key = cache_key("serve", CFG.d_model, CFG.vocab_size, 64, "float32",
                     "cpu", "cpu", extra=f"arch{CFG.name}")
     path.write_text(json.dumps({
-        "schema": 6,
+        "schema": 7,
         "entries": {key: {"config": {"slots": 16, "page_size": 64,
-                                     "kv_dtype": ""},
+                                     "kv_dtype": "", "prefill_chunk": 0},
                           "us": 1.0}},
     }))
     tc = TuningCache(path).load()

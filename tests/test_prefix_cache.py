@@ -1,0 +1,302 @@
+"""Prefix caching (repro.serving.kvpool.PrefixCache + engine wiring):
+radix-tree unit behavior (LRU eviction, pinning, convergent inserts),
+copy-on-write at the block-table level, warm-hit bit-identity against
+one-shot references (f32 and int8 sidecar restore), the shared16
+acceptance trace (cached == uncached streams, pool high-water <= 0.6x),
+preemption under sharing, chunked prefill riding the cached cursor, and
+the dense/recurrent validation edges."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro import configs as C
+from repro.models import init_params
+from repro.serving.engine import ServeConfig, ServeEngine
+from repro.serving.kvpool import BlockTables, PagePool, PrefixCache
+
+pytestmark = pytest.mark.serving
+
+CFG = C.get_smoke("smollm_360m")
+PARAMS = init_params(jax.random.PRNGKey(0), CFG)
+
+
+def _drain_all(eng, reqs):
+    rids = [eng.submit(p, mn) for p, mn in reqs]
+    res = eng.drain()
+    return [res[r] for r in rids]
+
+
+def _one_shot(cfg, params, prompt, max_new, max_len=64):
+    probe = ServeEngine(cfg, params, ServeConfig(batch_slots=1,
+                                                 max_len=max_len))
+    try:
+        return probe.generate(prompt[None, :], max_new)[0]
+    finally:
+        probe.close()
+
+
+# ---------------------------------------------------------------------------
+# Radix tree unit behavior
+# ---------------------------------------------------------------------------
+
+
+def test_prefix_tree_lru_convergence_and_max_pages():
+    pool = PagePool(num_pages=8, page_size=2)
+    tree = PrefixCache(pool)
+    a = pool.alloc(2)                       # prompt [1, 2, 3, 4]
+    assert tree.insert([1, 2, 3, 4], a, [None, None]) == 2
+    # Identical prompt again: existing nodes win, no extra cache refs —
+    # concurrent identical prompts converge on one resident copy.
+    assert tree.insert([1, 2, 3, 4], a, [None, None]) == 0
+    assert pool.refcount(a[0]) == 2         # 1 live + 1 cache, not 3
+    b = pool.alloc(1)                       # divergent tail [1, 2, 9, 9]
+    assert tree.insert([1, 2, 9, 9], [a[0], b[0]], [None, None]) == 1
+    # max_pages caps the walk (the chunked-prefill cursor's cap).
+    assert tree.lookup([1, 2, 3, 4], max_pages=1)[0] == [a[0]]
+    # Slots complete: live refs drop, the tree keeps all three pages.
+    pool.release(a)
+    pool.release([b[0]])
+    assert (pool.pages_in_use, pool.pages_resident) == (0, 3)
+    assert tree.evictable() == 3
+    # LRU: touching the [3, 4] branch sends eviction to the [9, 9] leaf.
+    tree.lookup([1, 2, 3, 4])
+    assert tree.evict(1) == 1
+    assert tree.lookup([1, 2, 9, 9])[0] == [a[0]]
+    assert tree.lookup([1, 2, 3, 4])[0] == a
+
+
+def test_prefix_tree_evict_skips_pinned_pages():
+    pool = PagePool(num_pages=4, page_size=2)
+    tree = PrefixCache(pool)
+    a = pool.alloc(2)
+    tree.insert([5, 6, 7, 8], a, [None, None])
+    pool.release([a[1]])                    # leaf idle; parent still live
+    assert tree.evictable() == 1
+    assert tree.evict(4) == 1               # only the idle leaf goes
+    assert pool.refcount(a[0]) == 2         # pinned page untouched
+    assert tree.lookup([5, 6, 7, 8])[0] == [a[0]]
+    pool.release([a[0]])                    # slot done: parent now idle
+    assert tree.evict(4) == 1
+    assert pool.pages_resident == 0
+    pool.check()
+
+
+# ---------------------------------------------------------------------------
+# Copy-on-write at the block-table level
+# ---------------------------------------------------------------------------
+
+
+def test_block_tables_cow_shared_and_exclusive():
+    pool = PagePool(num_pages=4, page_size=8)
+    bt = BlockTables(pool, n_slots=2, max_pages=4)
+    assert bt.assign(0, tokens=16) == [0, 1]
+    pool.share([0])                         # pin page 0 as a prefix hit
+    assert bt.assign(1, tokens=9, shared=[0]) == [0, 2]
+    assert pool.refcount(0) == 2
+    # Shared page: COW hands the writer a fresh exclusive copy; the
+    # other referent keeps the original.
+    assert bt.cow(1, 0) == (0, 3)
+    assert (pool.refcount(0), pool.refcount(3)) == (1, 1)
+    assert bt.slot_pages(1) == [3, 2]
+    assert bt.table[1, 0] == 3
+    # Exclusive page: no copy needed, same id back.
+    assert bt.cow(0, 1) == (1, 1)
+    # Pool exhausted: COW of a re-shared page reports failure (caller
+    # preempts) instead of clobbering the sharer's KV.
+    pool.share([1])
+    assert bt.cow(0, 1) is None
+    pool.release([1])
+    bt.release(0)
+    bt.release(1)
+    pool.check()
+    assert pool.pages_in_use == 0
+
+
+# ---------------------------------------------------------------------------
+# Validation edges
+# ---------------------------------------------------------------------------
+
+
+def test_prefix_cache_requires_paged_layout():
+    with pytest.raises(ValueError, match="prefix_cache"):
+        ServeEngine(CFG, PARAMS, ServeConfig(
+            batch_slots=2, max_len=64, kv="dense", prefix_cache=True,
+            pretune=False))
+
+
+def test_prefix_cache_recurrent_arch_bypasses():
+    """An arch that bypasses the page pool (recurrent state) has no
+    pages to share: prefix_cache degrades with the paged layout itself
+    — dense fallback, no tree — rather than erroring a tuned config."""
+    cfg = C.get_smoke("rwkv6_3b")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    eng = ServeEngine(cfg, params, ServeConfig(
+        batch_slots=2, max_len=64, kv="paged", page_size=16,
+        prefix_cache=True))
+    try:
+        assert eng.kv_mode == "dense" and eng.prefix is None
+    finally:
+        eng.close()
+
+
+# ---------------------------------------------------------------------------
+# Warm-hit bit-identity (f32 + int8 sidecar restore)
+# ---------------------------------------------------------------------------
+
+
+def test_prefix_hit_reuses_cached_pages_bit_identically():
+    """Second identical prompt: the prompt's full pages come from the
+    radix tree (hit capped one page short — the last prompt token is
+    always forwarded to produce the first logit) and the greedy stream
+    still equals the one-shot reference bit for bit."""
+    ps, plen = 8, 20
+    rng = np.random.default_rng(7)
+    prompt = rng.integers(0, CFG.vocab_size, size=(plen,)).astype(np.int32)
+    want = _one_shot(CFG, PARAMS, prompt, 8)
+    eng = ServeEngine(CFG, PARAMS, ServeConfig(
+        batch_slots=2, max_len=64, kv="paged", page_size=ps,
+        prefix_cache=True))
+    try:
+        cold = _drain_all(eng, [(prompt, 8)])[0]
+        assert eng.stats["prefix_hit_tokens"] == 0
+        warm = _drain_all(eng, [(prompt, 8)])[0]
+        assert eng.stats["prefix_hit_tokens"] == ((plen - 1) // ps) * ps
+        assert eng.stats["prefix_hits"] == 1
+        assert eng.stats["cow_copies"] == 0
+        assert eng.prefix_hit_rate() == pytest.approx(16 / 40)
+        assert eng.pool.pages_in_use == 0
+        eng.pool.check()
+    finally:
+        eng.close()
+    np.testing.assert_array_equal(cold, want)
+    np.testing.assert_array_equal(warm, want)
+
+
+def test_prefix_hit_int8_sidecar_restores_full_precision():
+    """int8 pages quantize on write — a naive warm hit would re-serve
+    rows that already went through the int8 round trip.  The sidecar
+    payload keeps the full-precision rows, so a warm int8 run must
+    equal the cold int8 run exactly (no second quantization)."""
+    params = init_params(jax.random.PRNGKey(5), CFG)
+    ps, plen = 8, 20
+    rng = np.random.default_rng(11)
+    prompt = rng.integers(0, CFG.vocab_size, size=(plen,)).astype(np.int32)
+    ref_eng = ServeEngine(CFG, params, ServeConfig(
+        batch_slots=2, max_len=64, kv="paged", page_size=ps,
+        kv_dtype="int8"))
+    try:
+        ref = _drain_all(ref_eng, [(prompt, 8)])[0]
+    finally:
+        ref_eng.close()
+    eng = ServeEngine(CFG, params, ServeConfig(
+        batch_slots=2, max_len=64, kv="paged", page_size=ps,
+        kv_dtype="int8", prefix_cache=True))
+    try:
+        cold = _drain_all(eng, [(prompt, 8)])[0]
+        warm = _drain_all(eng, [(prompt, 8)])[0]
+        assert eng.stats["prefix_hit_tokens"] == ((plen - 1) // ps) * ps
+    finally:
+        eng.close()
+    np.testing.assert_array_equal(cold, ref)
+    np.testing.assert_array_equal(warm, ref)
+
+
+# ---------------------------------------------------------------------------
+# shared16 acceptance: cached == uncached streams, high-water <= 0.6x
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kv_dtype", [None, "int8"], ids=["f32", "int8"])
+def test_shared16_prefix_cache_identity_and_high_water(kv_dtype):
+    """The committed shared-prompt trace (16 requests, 4 system-prompt
+    groups): enabling the prefix cache must leave every greedy stream
+    bit-identical to the uncached paged run AND drop the pool's live
+    high-water to <= 0.6x (shared prefix pages counted once; a drained
+    group's pages fall to cache-idle residency)."""
+    from repro.launch.serve import load_trace, run_trace
+    trace = load_trace("benchmarks/traces/shared16.jsonl", CFG.vocab_size)
+    kw = {"kv": "paged", "page_size": 16}
+    if kv_dtype:
+        kw["kv_dtype"] = kv_dtype
+    runs, hwm = {}, {}
+    for cached in (False, True):
+        eng = ServeEngine(CFG, PARAMS, ServeConfig(
+            batch_slots=4, max_len=128, prefix_cache=cached, **kw))
+        try:
+            rep = run_trace(eng, trace, log=None)
+            runs[cached] = rep
+            hwm[cached] = eng.pool.high_water
+            assert eng.pool.pages_in_use == 0
+            if cached:
+                assert eng.stats["prefix_hit_tokens"] > 0
+                assert rep["prefix_hit_rate"] > 0
+        finally:
+            eng.close()
+    assert set(runs[False]["results"]) == set(runs[True]["results"])
+    for tid in runs[False]["results"]:
+        np.testing.assert_array_equal(
+            runs[False]["results"][tid], runs[True]["results"][tid],
+            err_msg=f"trace id {tid} diverged under prefix caching")
+    assert hwm[True] <= 0.6 * hwm[False], \
+        f"cached hwm {hwm[True]} vs uncached {hwm[False]}"
+
+
+# ---------------------------------------------------------------------------
+# Preemption under sharing
+# ---------------------------------------------------------------------------
+
+
+def test_preemption_under_sharing_keeps_shared_pages():
+    """Pool exhaustion while a prefix page is shared three ways (older
+    slot, younger slot, radix tree): preempting the younger sharer must
+    drop only its own reference — the survivors' page is never freed —
+    and the re-served request regenerates the same greedy stream."""
+    ps = 8
+    rng = np.random.default_rng(17)
+    prompt = rng.integers(0, CFG.vocab_size, size=(16,)).astype(np.int32)
+    want = _one_shot(CFG, PARAMS, prompt, 12)
+    eng = ServeEngine(CFG, PARAMS, ServeConfig(
+        batch_slots=2, max_len=32, kv="paged", page_size=ps,
+        pool_pages=5, prefix_cache=True))
+    try:
+        rid_a = eng.submit(prompt, 12, arrival=0)
+        rid_b = eng.submit(prompt, 12, arrival=2)
+        res = eng.drain()
+        assert eng.stats["preemptions"] >= 1
+        assert eng.stats["prefix_hit_tokens"] > 0
+        assert eng.pool.pages_in_use == 0
+        eng.pool.check()
+    finally:
+        eng.close()
+    np.testing.assert_array_equal(res[rid_a], want)
+    np.testing.assert_array_equal(res[rid_b], want)
+
+
+# ---------------------------------------------------------------------------
+# Chunked prefill rides the cached cursor
+# ---------------------------------------------------------------------------
+
+
+def test_chunked_prefill_with_prefix_cache_odd_prompt():
+    """Chunk size not dividing the uncached suffix (58-token prompt,
+    24-token page-aligned chunks): the chunked cursor must clamp its
+    final partial chunk, cold (24 + 24 + 10) and warm (2-token suffix
+    after a 56-token hit) alike — regression for the chunk-overflow
+    bug where the last chunk scattered past the prompt."""
+    ps, plen = 8, 58
+    rng = np.random.default_rng(29)
+    prompt = rng.integers(0, CFG.vocab_size, size=(plen,)).astype(np.int32)
+    want = _one_shot(CFG, PARAMS, prompt, 8, max_len=80)
+    eng = ServeEngine(CFG, PARAMS, ServeConfig(
+        batch_slots=2, max_len=80, kv="paged", page_size=ps,
+        prefill_chunk=24, prefix_cache=True))
+    try:
+        cold = _drain_all(eng, [(prompt, 8)])[0]
+        assert eng.stats["prefill_chunks"] >= 3
+        warm = _drain_all(eng, [(prompt, 8)])[0]
+        assert eng.stats["prefix_hit_tokens"] == ((plen - 1) // ps) * ps
+    finally:
+        eng.close()
+    np.testing.assert_array_equal(cold, want)
+    np.testing.assert_array_equal(warm, want)
