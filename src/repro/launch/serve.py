@@ -343,6 +343,9 @@ def run_trace(engine, trace: List[dict],
     phit_base = engine.stats["prefix_hit_tokens"]
     ptot_base = engine.stats["prefix_prompt_tokens"]
     cow_base = engine.stats["cow_copies"]
+    bubble_base = engine.profiler.bubble_ms_total
+    pwall_base = engine.profiler.wall_ms_total
+    slo_base = engine.slo.breaches()
     t0 = time.monotonic()
     while pending or not engine.sched.done():
         if pending:
@@ -405,6 +408,13 @@ def run_trace(engine, trace: List[dict],
         "kv_bytes_hwm": engine.kv_bytes_high_water(),
         "kv_bytes_reserved": engine.kv_bytes_reserved(),
     }
+    # Step-time attribution, as per-replay deltas (the profiler's
+    # totals are lifetime-cumulative and benches replay warm engines).
+    pwall = engine.profiler.wall_ms_total - pwall_base
+    pbubble = engine.profiler.bubble_ms_total - bubble_base
+    rep["bubble_ms_total"] = pbubble
+    rep["bubble_fraction"] = pbubble / pwall if pwall > 0 else 0.0
+    rep["slo_breaches"] = engine.slo.breaches() - slo_base
     if paged:
         rep["pages_hwm"] = engine.pool.high_water
         rep["pages_reclaimed"] = engine.pool.total_reclaimed - reclaim_base
@@ -468,6 +478,22 @@ def main() -> None:
                          "roofline efficiency; see docs/OBSERVABILITY.md)")
     ap.add_argument("--prom-out", type=str, default=None,
                     help="write the metrics as Prometheus text exposition")
+    ap.add_argument("--flight-out", dest="flight_out", type=str,
+                    default=None,
+                    help="write the flight recorder's JSON (recent step "
+                         "decompositions + per-request timelines) at end "
+                         "of run; mid-run tripwires — SLO breach, "
+                         "preemption storm — write the same path "
+                         "immediately")
+    ap.add_argument("--slo-ttft-ms", dest="slo_ttft_ms", type=float,
+                    default=None,
+                    help="arm the SLO monitor: rolling-window p99 TTFT "
+                         "target in ms (breaches count, trace, and trip "
+                         "the flight recorder)")
+    ap.add_argument("--slo-itl-ms", dest="slo_itl_ms", type=float,
+                    default=None,
+                    help="arm the SLO monitor: rolling-window p99 "
+                         "inter-token target in ms")
     ap.add_argument("--warmup", action="store_true",
                     help="replay the trace once first (compiles every "
                          "program), reset the metrics, then measure — "
@@ -581,6 +607,14 @@ def main() -> None:
                        else args.prefill_chunk),
         token_budget=args.token_budget, policy=args.policy,
         pack_mesh=mesh, pack_min_flops=args.pack_min_flops))
+    if args.slo_ttft_ms is not None:
+        engine.slo.set_targets(ttft_ms=args.slo_ttft_ms)
+    if args.slo_itl_ms is not None:
+        engine.slo.set_targets(itl_ms=args.slo_itl_ms)
+    if args.flight_out:
+        # Armed path: mid-run tripwires (breach / preemption storm)
+        # write the snapshot immediately, not just at end of run.
+        engine.flight.path = args.flight_out
     stream_cb = None
     if args.stream:
         def stream_cb(tid, tok, done):
@@ -591,6 +625,7 @@ def main() -> None:
             run_trace(engine, trace, log=None)
             engine.drain()
             bundle.registry.reset_values()
+            engine.profiler.reset_totals()
         rep = run_trace(engine, trace, stream=stream_cb,
                         speed=args.speed)
         expected = len(trace) - len(rep["cancelled_ids"])
@@ -622,6 +657,21 @@ def main() -> None:
             "achieved decode throughput / analytic peak").set(eff)
         print(f"[serve] efficiency={eff:.3e} of analytic peak "
               f"(backend={jax.default_backend()})")
+        # Step-time attribution: the run's device/bubble split and the
+        # per-kernel roofline stall table (worst bound_ratio first).
+        stall = " ".join(
+            f"{k.name}:{k.stall_class}({k.bound_ratio:.1e})"
+            for k in engine.profiler.kernel_table()) or "n/a"
+        print(f"[serve] attribution: bubble={rep['bubble_fraction']:.3f} "
+              f"(bubble_ms={rep['bubble_ms_total']:.1f}) stall={stall}")
+        if (args.slo_ttft_ms is not None or args.slo_itl_ms is not None
+                or rep["slo_breaches"]):
+            s = engine.slo.summary()
+            print(f"[serve] slo: breaches={rep['slo_breaches']} "
+                  f"ttft_target={args.slo_ttft_ms} "
+                  f"itl_target={args.slo_itl_ms} "
+                  f"ttft_breaches={s['ttft']['breaches']} "
+                  f"itl_breaches={s['itl']['breaches']}")
         if engine.kv_mode == "paged":
             print(f"[serve] paged kv: page_size={engine.pool.page_size} "
                   f"kv_dtype={engine.scfg.kv_dtype or 'cache'} "
@@ -661,11 +711,19 @@ def main() -> None:
                 required_histograms=("serve.ttft_ms",
                                      "serve.inter_token_ms"),
                 required_gauges=("kvpool.pages_in_use",
-                                 "serve.efficiency", "serve.kv_tokens"))
+                                 "serve.efficiency", "serve.kv_tokens",
+                                 "serve.bubble_fraction"))
             print(f"[serve] wrote metrics snapshot -> {args.metrics_out}")
         if args.prom_out:
             obs.write_prometheus(args.prom_out, bundle.registry)
             print(f"[serve] wrote prometheus text -> {args.prom_out}")
+        if args.flight_out:
+            doc = engine.flight.write(args.flight_out,
+                                      reason="end_of_run")
+            print(f"[serve] wrote flight record -> {args.flight_out} "
+                  f"(steps={len(doc['steps'])} "
+                  f"requests={len(doc['requests'])} "
+                  f"trips={len(doc['trips'])})")
     finally:
         engine.close()
 

@@ -22,12 +22,20 @@ from repro.obs.export import (SNAPSHOT_SCHEMA, flatten_snapshot,
                               validate_snapshot, write_metrics,
                               write_prometheus)
 from repro.obs import efficiency
+from repro.obs.profile import (KernelProfile, StepProfiler, classify_kernel,
+                               extract_costs, peak_bandwidth,
+                               ridge_intensity)
+from repro.obs.slo import SLOMonitor, window_percentile
+from repro.obs.flight import FlightRecorder
 
 __all__ = [
     "Counter", "Gauge", "Histogram", "Registry", "Tracer", "NULL_TRACER",
     "SNAPSHOT_SCHEMA", "flatten_snapshot", "validate_snapshot",
     "validate_chrome_trace", "write_metrics", "write_prometheus",
     "efficiency", "Obs", "get_obs", "configure", "reset", "count",
+    "KernelProfile", "StepProfiler", "classify_kernel", "extract_costs",
+    "peak_bandwidth", "ridge_intensity", "SLOMonitor", "window_percentile",
+    "FlightRecorder",
 ]
 
 

@@ -90,6 +90,16 @@ class Histogram:
     per-bucket counts are kept and percentiles are linearly interpolated
     inside the winning bucket, Prometheus-style.
 
+    Exact mode is capped at ``max_samples`` retained observations
+    (default ``DEFAULT_MAX_SAMPLES``): when the buffer would exceed the
+    cap it is *deterministically decimated* — sorted, then every other
+    order statistic kept (min and max always survive).  Each decimation
+    halves memory and perturbs any percentile by at most one
+    inter-sample gap, so long replays stay bounded while short runs
+    (fewer than ``max_samples`` observations) remain bit-exact.
+    ``count``/``sum``/``min``/``max`` are tracked separately and stay
+    exact regardless.  ``max_samples=None`` disables the cap.
+
     >>> h = Histogram("x", buckets=[1.0, 10.0, 100.0])
     >>> for v in (0.5, 5.0, 5.0, 50.0): h.observe(v)
     >>> h.count, round(h.sum, 1)
@@ -99,11 +109,18 @@ class Histogram:
     """
 
     __slots__ = ("name", "help", "buckets", "counts", "count", "sum",
-                 "min", "max", "_values")
+                 "min", "max", "max_samples", "_values")
+
+    DEFAULT_MAX_SAMPLES = 65536
 
     def __init__(self, name: str, help: str = "",
-                 buckets: Optional[Sequence[float]] = None):
+                 buckets: Optional[Sequence[float]] = None,
+                 max_samples: Optional[int] = DEFAULT_MAX_SAMPLES):
         self.name, self.help = name, help
+        if max_samples is not None and max_samples < 2:
+            raise ValueError(f"histogram {name}: max_samples must be "
+                             f">= 2, got {max_samples}")
+        self.max_samples = max_samples
         if buckets is not None:
             b = [float(x) for x in buckets]
             if b != sorted(b) or len(set(b)) != len(b):
@@ -134,8 +151,21 @@ class Histogram:
             self.max = v
         if self.buckets is None:
             self._values.append(v)
+            if (self.max_samples is not None
+                    and len(self._values) > self.max_samples):
+                self._decimate()
         else:
             self.counts[bisect.bisect_left(self.buckets, v)] += 1
+
+    def _decimate(self) -> None:
+        """Halve the retained-sample buffer, keeping every other order
+        statistic (plus the true max).  Deterministic — no RNG — so
+        replays of the same trace produce the same percentiles."""
+        xs = sorted(self._values)
+        kept = xs[::2]
+        if kept[-1] != xs[-1]:
+            kept.append(xs[-1])
+        self._values = kept
 
     def percentile(self, q: float) -> float:
         """q in [0, 100].  NaN when empty (callers report, not crash)."""
@@ -259,14 +289,17 @@ class Registry:
         return g
 
     def histogram(self, name: str, help: str = "",
-                  buckets: Optional[Sequence[float]] = None) -> Histogram:
+                  buckets: Optional[Sequence[float]] = None,
+                  max_samples: Optional[int] = Histogram.DEFAULT_MAX_SAMPLES,
+                  ) -> Histogram:
         if not self.enabled:
             return _NULL_HISTOGRAM
         h = self.histograms.get(name)
         if h is None:
             self._claim(name, "histogram")
             h = self.histograms[name] = Histogram(name, help,
-                                                  buckets=buckets)
+                                                  buckets=buckets,
+                                                  max_samples=max_samples)
         return h
 
     def reset(self) -> None:

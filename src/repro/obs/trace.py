@@ -128,6 +128,45 @@ class Tracer:
                              "args": {k: float(v)
                                       for k, v in values.items()}})
 
+    def metadata(self, name: str, /, pid: int = 0, tid: int = 0,
+                 **args: Any) -> None:
+        """A ``M`` metadata event (``process_name`` / ``thread_name`` …)
+        naming a pid/tid lane in the Perfetto UI.  Emitted with ``ts`` 0
+        so it sorts ahead of the events it labels."""
+        if not self.enabled:
+            return
+        self._events.append({"name": name, "ph": "M", "pid": pid,
+                             "tid": tid, "ts": 0.0, "args": args})
+
+    def process_name(self, label: str, pid: int = 0) -> None:
+        self.metadata("process_name", pid=pid, name=label)
+
+    def thread_name(self, label: str, tid: int = 0, pid: int = 0) -> None:
+        self.metadata("thread_name", pid=pid, tid=tid, name=label)
+
+    _FLOW_PH = {"start": "s", "step": "t", "end": "f"}
+
+    def flow(self, name: str, id: Any, phase: str = "step",
+             cat: str = "flow", **args: Any) -> None:
+        """A flow-event arrow (``s``/``t``/``f``) on the ``(cat, id)``
+        flow track.  Linking one request's per-step spans with
+        ``start`` → ``step``… → ``end`` draws a per-request lane across
+        engine steps in Perfetto."""
+        if not self.enabled:
+            return
+        ph = self._FLOW_PH.get(phase)
+        if ph is None:
+            raise ValueError(f"flow phase {phase!r} not in "
+                             f"{sorted(self._FLOW_PH)}")
+        ev: Dict[str, Any] = {"name": name, "ph": ph, "cat": cat,
+                              "id": str(id), "pid": 0, "tid": 0,
+                              "ts": self._now_us()}
+        if ph == "f":
+            ev["bp"] = "e"   # bind to the enclosing slice's end
+        if args:
+            ev["args"] = args
+        self._events.append(ev)
+
     def async_begin(self, name: str, id: Any, cat: str = "req",
                     **args) -> None:
         """Open one async span of ``name`` on the ``(cat, id)`` track."""
@@ -202,6 +241,11 @@ def validate_chrome_trace(doc: Dict[str, Any]) -> None:
     opens: Dict[tuple, int] = {}
     for ev in doc["traceEvents"]:
         ph = ev.get("ph")
+        if ph == "M":
+            # Metadata events label lanes; ts is optional per the format.
+            if "name" not in ev:
+                raise ValueError(f"metadata event missing name: {ev}")
+            continue
         if "name" not in ev or "ts" not in ev:
             raise ValueError(f"event missing name/ts: {ev}")
         if ph == "X":
@@ -215,6 +259,9 @@ def validate_chrome_trace(doc: Dict[str, Any]) -> None:
             if n < 0:
                 raise ValueError(f"async end before begin on {key}")
             opens[key] = n
+        elif ph in ("s", "t", "f"):
+            if "id" not in ev:
+                raise ValueError(f"flow event missing id: {ev}")
         elif ph in ("i", "C"):
             pass
         else:

@@ -69,7 +69,7 @@ import numpy as np
 from repro.models import (decode_step, forward, init_cache,
                           init_paged_cache, paged_eligible, prefill)
 from repro.models.config import ModelConfig
-from repro.obs import get_obs
+from repro.obs import FlightRecorder, SLOMonitor, StepProfiler, get_obs
 from repro.serving.kvpool import (BlockTables, PagePool, PrefixCache,
                                   pages_for)
 from repro.serving.scheduler import (DECODE, PREFILLING, Request,
@@ -439,6 +439,33 @@ class ServeEngine:
         self._prefix_prompt_tokens = 0
         if self.pool is not None:
             self.pool.bind_metrics(obs.registry)
+        # -- attribution layer (PR 10): profiler + SLO + flight ------------
+        # Step-time decomposition (device estimate vs host bubble) and
+        # the per-kernel roofline table.
+        try:
+            dtype_name = jnp.dtype(getattr(cfg, "cdtype", "bfloat16")).name
+        except TypeError:
+            dtype_name = "bfloat16"
+        self._dtype_bytes = float(jnp.dtype(dtype_name).itemsize)
+        self.profiler = StepProfiler(obs.registry,
+                                     backend=jax.default_backend(),
+                                     dtype_name=dtype_name)
+        # Rolling-window tail-latency monitor.  Targets default to off;
+        # the launcher arms them (--slo-ttft-ms / --slo-itl-ms).
+        self.slo = SLOMonitor(obs.registry, tracer=obs.tracer)
+        # Bounded incident recorder; SLO breaches and preemption storms
+        # trip it (writes happen only once a path is armed).
+        self.flight = FlightRecorder()
+        self.slo.on_breach(
+            lambda series, q, target: self.flight.trip(
+                "slo_breach", series=series, window_ms=q,
+                target_ms=target))
+        self._kernel_costs: Dict[str, tuple] = {}  # op -> (flops, bytes)
+        if obs.tracer.enabled:
+            # Name the pid/tid lanes so Perfetto shows "engine" instead
+            # of bare zeros (idempotent — duplicates are harmless).
+            obs.tracer.process_name("repro-serve")
+            obs.tracer.thread_name("engine")
         # -- continuous-batching state (persistent across calls) ----------
         self.sched = Scheduler(scfg.batch_slots, policy=scfg.policy,
                                registry=obs.registry)
@@ -789,6 +816,9 @@ class ServeEngine:
         tr.async_begin("request", rid, prompt_len=int(prompt.size),
                        max_new=int(max_new))
         tr.async_begin("queued", rid)
+        self.flight.record_request_event(
+            rid, "submitted", prompt_len=int(prompt.size),
+            max_new=int(max_new), arrival=arrival)
         if arrival <= self.step_count:
             # TTFT clock starts the moment the request is runnable;
             # future arrivals are stamped when their step comes up.
@@ -879,6 +909,7 @@ class ServeEngine:
                     toks = np.asarray(
                         self._sample_slots(logits, jnp.asarray(token_idx)))
                 decode_ms = (time.perf_counter() - t_dec) * 1e3
+                self._profile_decode(decode_ms, pos)
                 self.stats["decode_steps"] += 1
                 if events["admitted"] and holdover:
                     # A mid-stream admission shared this decode step
@@ -915,11 +946,29 @@ class ServeEngine:
             sum(s.length for s in self.sched.active_slots()))
         self._g_active.set(len(self.sched.active_slots()))
         self.step_count += 1
+        step_ms = (time.perf_counter() - t_step) * 1e3
         events["timings"] = {
             "admit_ms": admit_ms, "prefill_ms": prefill_ms,
-            "decode_ms": decode_ms,
-            "step_ms": (time.perf_counter() - t_step) * 1e3,
+            "decode_ms": decode_ms, "step_ms": step_ms,
         }
+        # Attribution: the three phase probes are the device-attributed
+        # estimate (decode ends host-synced, admit syncs on first-token
+        # readback, chunked prefill pipelines behind decode); whatever
+        # wall time they don't cover is the host/dispatch bubble.
+        prof = self.profiler.record_step(
+            step_ms, {"admit": admit_ms, "prefill": prefill_ms,
+                      "decode": decode_ms})
+        events["profile"] = prof
+        tr.counter("step.attribution", bubble_ms=prof["bubble_ms"],
+                   device_ms=prof["device_ms"])
+        self.flight.record_step(
+            self.step_count - 1, wall_ms=round(step_ms, 3),
+            device_ms=round(prof["device_ms"], 3),
+            bubble_ms=round(prof["bubble_ms"], 3),
+            admitted=len(events["admitted"]),
+            decoded=len(events["decoded"]),
+            finished=len(events["finished"]),
+            preempted=len(events["preempted"]))
         return events
 
     def _decode_table(self) -> np.ndarray:
@@ -958,13 +1007,81 @@ class ServeEngine:
                     if req is not None:
                         backlog += min(chunk,
                                        req.prompt_len - s.prefill_pos)
-        return {
+        sig = {
             "token_budget": self.scfg.token_budget,
             "decode_tokens": len(self.sched.active_slots()),
             "prefill_backlog": backlog,
             "itl_p99_ms": (self._h_itl.percentile(99)
                            if self._h_itl.count else None),
         }
+        # Rolling-window SLO state rides along so the latency policy
+        # can back off admissions while a breach is in progress.
+        sig.update(self.slo.signals())
+        return sig
+
+    # -- kernel roofline capture -------------------------------------------
+
+    def _profile_decode(self, decode_ms: float, pos: np.ndarray) -> None:
+        """Roofline-place the step's batched decode.  Costs come from
+        the compiled executable's ``cost_analysis()`` when the backend
+        reports them (captured once — the lowering is jit-cache-hot),
+        else the analytic :func:`~repro.kernels.ops.op_cost_model`;
+        the timing is this step's host-synced decode probe, so the
+        table tracks warm steady-state performance (last-wins)."""
+        op = ("flash_paged_decode" if self.kv_mode == "paged"
+              else "flash_decode")
+        costs = self._kernel_costs.get(op)
+        if costs is None:
+            from repro.obs.profile import extract_costs
+            try:
+                if self.kv_mode == "paged":
+                    lowered = self._decode.lower(
+                        self.params, jnp.asarray(self._tok),
+                        jnp.asarray(pos),
+                        jnp.asarray(self._decode_table()), self.caches)
+                else:
+                    lowered = self._decode.lower(
+                        self.params, jnp.asarray(self._tok),
+                        jnp.asarray(pos), self.caches)
+                costs = extract_costs(lowered.compile())
+            except Exception:
+                costs = None
+            if costs is None:
+                costs = self._analytic_decode_costs(op)
+            self._kernel_costs[op] = costs
+        if decode_ms > 0:
+            self.profiler.record_kernel(op, costs[0], costs[1],
+                                        measured_us=decode_ms * 1e3)
+
+    def _analytic_decode_costs(self, op: str) -> tuple:
+        from repro.kernels.ops import op_cost_model
+        from repro.obs.efficiency import model_flops_per_token
+        cfg = self.cfg
+        mfpt = model_flops_per_token(cfg)
+        return op_cost_model(
+            op, batch=self.scfg.batch_slots, heads=cfg.n_heads,
+            kv_heads=cfg.n_kv_heads, seq=self.scfg.max_len,
+            d_head=cfg.d_head, dtype_bytes=self._dtype_bytes,
+            kv_bytes=self._dtype_bytes, layers=cfg.n_layers,
+            weight_flops=mfpt * self.scfg.batch_slots,
+            weight_bytes=mfpt / 2.0 * self._dtype_bytes)
+
+    def _profile_prefill_chunk(self, take: int, chunk_ms: float) -> None:
+        """Roofline-place one prompt chunk (forward + page scatter)."""
+        if chunk_ms <= 0 or take <= 0:
+            return
+        from repro.kernels.ops import op_cost_model
+        from repro.obs.efficiency import model_flops_per_token
+        cfg = self.cfg
+        mfpt = model_flops_per_token(cfg)
+        flops, nbytes = op_cost_model(
+            "prefill_chunk", chunk_tokens=take, heads=cfg.n_heads,
+            kv_heads=cfg.n_kv_heads, d_head=cfg.d_head,
+            kv_bytes=self._dtype_bytes, layers=cfg.n_layers,
+            weight_flops=mfpt * take,
+            weight_bytes=mfpt / 2.0 * self._dtype_bytes)
+        self.profiler.record_kernel("prefill_chunk", flops, nbytes,
+                                    measured_us=chunk_ms * 1e3)
 
     def _admit(self, events: Dict[str, Any]) -> None:
         """Admission pass: free slots AND (paged) enough free pages for
@@ -1062,6 +1179,9 @@ class ServeEngine:
                                  self._prefill_slot(slot, req)))
             self.stats["admitted"] += 1
             events["admitted"].append(req.rid)
+            self.flight.record_request_event(
+                req.rid, "admitted", slot=slot.index,
+                step=self.step_count)
         # Unpin fits()-approved requests the policy did not select this
         # pass (they stay queued; the next pass re-pins).
         for hp, _ in pins.values():
@@ -1127,6 +1247,7 @@ class ServeEngine:
             buf = pages_for(take, ps) * ps
         else:
             buf = min(chunk, self._fresh_len - c0)
+        t_chunk = time.perf_counter()
         with self._obs.tracer.span("prefill_chunk", cat="engine",
                                    rid=req.rid, lo=c0, take=take):
             toks = np.zeros((1, buf), np.int32)
@@ -1156,6 +1277,8 @@ class ServeEngine:
                     jnp.asarray(ids), jnp.asarray(src))
             self.stats["prefill_chunks"] += 1
             self._c_chunks.inc()
+        self._profile_prefill_chunk(
+            take, (time.perf_counter() - t_chunk) * 1e3)
         slot.prefill_pos = c0 + take
         if slot.prefill_pos < plen:
             return
@@ -1197,6 +1320,8 @@ class ServeEngine:
             self._cancel_log.append(rid)
             tr.async_end("queued", rid)
             tr.async_end("request", rid, cancelled=True)
+            self.flight.record_request_event(rid, "cancelled",
+                                             queued=True)
             return True
         for slot in self.sched.slots:
             if slot.rid == rid and slot.state in (DECODE, PREFILLING):
@@ -1215,6 +1340,8 @@ class ServeEngine:
                 tr.instant("cancel", cat="engine", rid=rid)
                 tr.async_end("decode", rid)
                 tr.async_end("request", rid, cancelled=True)
+                self.flight.record_request_event(rid, "cancelled",
+                                                 queued=False)
                 return True
         return False
 
@@ -1285,6 +1412,9 @@ class ServeEngine:
         tr.instant("preempt", cat="engine", rid=rid)
         tr.async_end("decode", rid)
         tr.async_begin("queued", rid)
+        # Storm detection: enough preemptions inside one window of
+        # steps trips the flight recorder.
+        self.flight.note_preemption(self.step_count, rid)
         # The regenerated stream re-measures TTFT from the eviction.
         self._runnable_at[rid] = time.perf_counter()
 
@@ -1308,13 +1438,18 @@ class ServeEngine:
         slot.generated += 1
         self._c_tokens.inc()
         now = time.perf_counter()
+        tr = self._obs.tracer
         t0 = self._runnable_at.pop(rid, None)
         if t0 is not None:
             # First token since the request became runnable (or since
             # its last preemption): this IS the TTFT sample.
             ttft_ms = (now - t0) * 1e3
             self._h_ttft.observe(ttft_ms)
+            self.slo.observe_ttft(ttft_ms)
             events["ttft_ms"][rid] = ttft_ms
+            self.flight.record_request_event(
+                rid, "first_token", ttft_ms=round(ttft_ms, 3))
+            tr.flow(f"req{rid}", rid, "start", cat="reqflow")
         else:
             prev = self._last_emit.get(rid)
             if prev is not None:
@@ -1325,7 +1460,9 @@ class ServeEngine:
                 # it.  First tokens are TTFT, never ITL.
                 gap_ms = (now - prev) * 1e3
                 self._h_itl.observe(gap_ms)
+                self.slo.observe_itl(gap_ms)
                 events["itl_ms"][rid] = gap_ms
+                tr.flow(f"req{rid}", rid, "step", cat="reqflow")
         self._last_emit[rid] = now
         eos = (self.scfg.eos_id is not None
                and int(tok) == int(self.scfg.eos_id))
@@ -1343,9 +1480,12 @@ class ServeEngine:
                 # the step the request ends, not when the slot refills.
                 self.blocks.release(slot.index)
             self.sched.release(slot)
-            tr = self._obs.tracer
+            tr.flow(f"req{rid}", rid, "end", cat="reqflow")
             tr.async_end("decode", rid)
             tr.async_end("request", rid, tokens=slot.generated, eos=eos)
+            self.flight.record_request_event(
+                rid, "finished", tokens=int(slot.generated),
+                eos=bool(eos))
         cb = (self._on_token.pop(rid, None) if done
               else self._on_token.get(rid))
         if cb is not None:

@@ -155,7 +155,10 @@ class LatencyPolicy(FifoPolicy):
       in-flight tokens; or
     - the measured ``serve.inter_token_ms`` p99 is above
       ``target_p99_ms`` (when set), i.e. streams are already missing
-      their SLO.
+      their SLO; or
+    - the engine's :class:`repro.obs.slo.SLOMonitor` reports an active
+      rolling-window breach (``slo_breached`` in the signals — armed by
+      the launcher's ``--slo-ttft-ms`` / ``--slo-itl-ms``).
 
     Deferral trades time-to-first-token for inter-token latency of the
     streams already running; FIFO order among deferred requests is kept.
@@ -177,6 +180,12 @@ class LatencyPolicy(FifoPolicy):
         p99 = sig.get("itl_p99_ms")
         if (self.target_p99_ms is not None and p99 is not None
                 and p99 > self.target_p99_ms):
+            return []
+        # The SLO monitor's rolling-window verdict (armed via
+        # --slo-ttft-ms / --slo-itl-ms): while the recent tail is over
+        # target, stop admitting — new prompts' prefills would push the
+        # breached streams further past their SLO.
+        if sig.get("slo_breached"):
             return []
         return super().select(view)
 

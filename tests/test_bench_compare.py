@@ -197,3 +197,47 @@ def test_metrics_non_snapshot_is_structural(tmp_path):
     bad = _write(tmp_path, "bad.json", BASE)  # bench JSON, not snapshot
     assert bench_compare.main([b, bad, "--metrics"]) \
         == bench_compare.STRUCTURAL
+
+
+# ---------------------------------------------------------------------------
+# Lost-key diagnostics: vanished keys are named with a nearest-match hint
+# ---------------------------------------------------------------------------
+
+
+def test_metrics_lost_key_names_nearest_survivor(tmp_path, capfd):
+    """A renamed gauge reads as a structural failure that *names* the
+    vanished keys and points at the obvious near-miss survivor."""
+    cand = copy.deepcopy(MBASE)
+    cand["gauges"]["serve.efficiency_v2"] = \
+        cand["gauges"].pop("serve.efficiency")
+    b = _write(tmp_path, "mb.json", MBASE)
+    c = _write(tmp_path, "mc.json", cand)
+    assert bench_compare.main([b, c, "--metrics"]) \
+        == bench_compare.STRUCTURAL
+    out = capfd.readouterr().out
+    # Gauges flatten to .value/.high_water — both lost, both named.
+    assert "lost 2 metrics key(s)" in out
+    assert "'serve.efficiency.value'" in out
+    assert "'serve.efficiency.high_water'" in out
+    assert "nearest surviving key: 'serve.efficiency_v2" in out
+
+
+def test_rows_lost_key_names_nearest_survivor(tmp_path, capfd):
+    cand = copy.deepcopy(BASE)
+    for r in cand["rows"]:
+        if r["name"] == "pack.gemm.p2q4.overlap":
+            r["name"] = "pack.gemm.p2q4.overlap_v2"
+    b = _write(tmp_path, "base.json", BASE)
+    c = _write(tmp_path, "cand.json", cand)
+    assert bench_compare.main([b, c]) == bench_compare.STRUCTURAL
+    out = capfd.readouterr().out
+    assert "lost 1 row key(s)" in out
+    assert "'pack.gemm.p2q4.overlap'" in out
+    assert "nearest surviving key: 'pack.gemm.p2q4.overlap_v2'" in out
+
+
+def test_lost_key_report_no_close_match():
+    lines = bench_compare.lost_key_report(
+        ["serve.ttft_ms.p99"], ["completely.unrelated.key"])
+    assert len(lines) == 2
+    assert "no close match" in lines[1]

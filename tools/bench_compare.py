@@ -35,14 +35,30 @@ rows/reference, unreadable file) — both nonzero states fail CI.
 from __future__ import annotations
 
 import argparse
+import difflib
 import json
 import sys
-from typing import Dict, Optional
+from typing import Dict, List, Optional
 
 DEFAULT_REF = "pack.gemm.p2q4.ring"
 DEFAULT_TOLERANCE = 2.5
 
 OK, REGRESSION, STRUCTURAL = 0, 1, 2
+
+
+def lost_key_report(missing: List[str], survivors: List[str],
+                    what: str = "metrics") -> List[str]:
+    """Human-readable lines for keys the candidate lost: each vanished
+    key plus its nearest surviving key (a rename shows up as an obvious
+    near-miss; a true deletion shows ``no close match``)."""
+    lines = [f"bench_compare: candidate lost {len(missing)} "
+             f"{what} key(s):"]
+    for key in missing:
+        close = difflib.get_close_matches(key, survivors, n=1, cutoff=0.6)
+        hint = f"nearest surviving key: {close[0]!r}" if close \
+            else "no close match among surviving keys"
+        lines.append(f"  - {key!r} ({hint})")
+    return lines
 
 
 def load_rows(path: str) -> Dict[str, float]:
@@ -85,7 +101,7 @@ def load_metrics(path: str) -> Dict[str, float]:
 
 def compare_metrics(base: Dict[str, float], cand: Dict[str, float],
                     tolerance: float, filter_: str = "",
-                    out=sys.stdout) -> int:
+                    out=None) -> int:
     """Direct candidate/baseline ratio per flattened snapshot key.
     Keys whose baseline is 0 (or missing from the candidate while
     filtered out) are reported but never gated — a counter appearing
@@ -99,8 +115,8 @@ def compare_metrics(base: Dict[str, float], cand: Dict[str, float],
         return STRUCTURAL
     missing = sorted(set(base) - set(cand))
     if missing:
-        print(f"bench_compare: candidate lost metrics: {missing}",
-              file=out)
+        for line in lost_key_report(missing, sorted(cand), "metrics"):
+            print(line, file=out)
         return STRUCTURAL
     status = OK
     print(f"{'metric':44s} {'base':>11s} {'cand':>11s} "
@@ -137,7 +153,7 @@ def normalize(rows: Dict[str, float], ref: str) -> Dict[str, float]:
 
 
 def compare(base: Dict[str, float], cand: Dict[str, float], ref: str,
-            tolerance: float, filter_: str = "", out=sys.stdout) -> int:
+            tolerance: float, filter_: str = "", out=None) -> int:
     """Row-by-row normalized comparison; returns an exit code.
     ``filter_`` restricts the gated rows (the reference row is always
     kept) — e.g. ``pack.gemm`` gates the schedule A/B rows but not the
@@ -155,7 +171,8 @@ def compare(base: Dict[str, float], cand: Dict[str, float], ref: str,
         return STRUCTURAL
     missing = sorted(set(nb) - set(nc))
     if missing:
-        print(f"bench_compare: candidate lost rows: {missing}", file=out)
+        for line in lost_key_report(missing, sorted(nc), "row"):
+            print(line, file=out)
         return STRUCTURAL
     status = OK
     print(f"{'row':40s} {'base_rel':>9s} {'cand_rel':>9s} "
